@@ -1,0 +1,65 @@
+"""Hillclimb diagnosis: per-computation cost breakdown of one dry-run cell.
+
+    PYTHONPATH=src:. python benchmarks/analyze_cell.py <arch> <shape> [mesh]
+"""
+import gzip
+import sys
+from collections import Counter
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.hlo_cost import (HloCost, _COLL_KINDS, _TRIP_RE,
+                                   _type_bytes)
+
+
+def main(arch, shape, mesh="single"):
+    p = Path(__file__).parent / "results" / "dryrun" / f"{arch}__{shape}__{mesh}.hlo.gz"
+    text = gzip.open(p, "rt").read()
+    hc = HloCost(text)
+    entry = next(c for c in hc.comps if "main" in c)
+
+    # while-loop inventory with trips
+    import re
+    whiles = []
+    for ins in hc.comps[entry]:
+        if ins.op == "while":
+            m = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            t = _TRIP_RE.search(ins.rest)
+            whiles.append((m.group(1), int(t.group(1)) if t else 1))
+    print("== top-level while loops (body, trips) ==")
+    for b, t in whiles:
+        c = hc.comp_cost(b)
+        print(f"  {b} x{t}: flops/trip={c['flops']:.3e} bytes/trip={c['bytes']:.3e} "
+              f"coll/trip={sum(v['bytes'] for v in c['coll'].values()):.3e}")
+
+    # largest collectives anywhere (scaled by enclosing trips = 1 here; show raw)
+    print("== largest collective ops (per occurrence) ==")
+    rows = []
+    for cname, instrs in hc.comps.items():
+        for ins in instrs:
+            base = ins.op.replace("-start", "")
+            if base in _COLL_KINDS and not ins.op.endswith("-done"):
+                rows.append((_type_bytes(ins.type), base, cname, ins.type[:60]))
+    rows.sort(reverse=True)
+    for b, kind, cname, t in rows[:15]:
+        print(f"  {b/1e6:9.1f}MB {kind:20s} in {cname[:46]:46s} {t}")
+
+    # biggest byte-producing instruction types in the hottest while body
+    if whiles:
+        body = max(whiles, key=lambda w: hc.comp_cost(w[0])["bytes"] * w[1])[0]
+        print(f"== byte histogram of hottest body: {body} ==")
+        cnt = Counter()
+        for ins in hc.comps[body]:
+            if ins.op in ("parameter", "constant", "get-tuple-element", "tuple"):
+                continue
+            cnt[ins.op] += _type_bytes(ins.type)
+        for op, b in cnt.most_common(12):
+            print(f"  {op:25s} {b/1e9:8.3f} GB")
+    c = hc.entry_cost()
+    print(f"== entry totals: flops={c['flops']:.3e} bytes={c['bytes']:.3e} "
+          f"wire={c['coll_wire_bytes']:.3e} ==")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

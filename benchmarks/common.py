@@ -1,0 +1,153 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Implements the four cache strategies compared throughout the paper's
+evaluation (§6.3), all on top of Legion-JAX's own substrate so the
+comparison isolates the *strategy*, exactly like the paper's
+"implemented-in-Legion" baselines:
+
+  gnnlab        noPart + noNV : global pre-sampling hotness, identical cache
+                                replicated on every device (GNNLab).
+  quiver-plus   noPart + NV   : global hotness, cache hash-sliced inside each
+                                clique, replicated across cliques (Quiver).
+  pagraph-plus  Edge-cut+noNV : per-partition hotness, per-device cache,
+                                NVLink unused (PaGraph w/ XtraPulp + presample).
+  legion        Hierarchical+NV: inter-clique edge-cut + intra-clique CSLP
+                                slicing (this paper).
+
+The PCIe metric is the simulated transaction counter from
+repro.core (CLS=64B), identical to what the cost model optimizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.cliques import clique_cover, topology_matrix
+from repro.core.cslp import cslp
+from repro.core.hotness import CLS, S_FLOAT32, presample_clique
+from repro.core.partition import hierarchical_partition, partition_graph
+from repro.graph.csr import CSRGraph, powerlaw_graph
+from repro.graph.sampling import host_sample_batch, unique_vertices
+
+FANOUTS = (25, 10)
+
+
+def default_graph(n: int = 40_000, seed: int = 0, feat_dim: int = 100) -> CSRGraph:
+    """Products-profile stand-in (avg degree 50, power-law)."""
+    return powerlaw_graph(n, 50, seed=seed, feat_dim=feat_dim)
+
+
+@dataclasses.dataclass
+class CacheSystem:
+    name: str
+    feat_cache_per_dev: Dict[int, np.ndarray]  # device -> cached vertex ids
+    clique_of_dev: Dict[int, int]
+    cliques: List[List[int]]
+    shuffle: str  # "global" | "local"
+    tablets: Dict[int, np.ndarray]
+    nv_enabled: bool
+
+    def lookup_sets(self):
+        """device -> the id set its requests can hit (own or clique cache)."""
+        out = {}
+        for d, c in self.clique_of_dev.items():
+            if self.nv_enabled:
+                ids = np.concatenate([self.feat_cache_per_dev[x]
+                                      for x in self.cliques[c]])
+            else:
+                ids = self.feat_cache_per_dev[d]
+            out[d] = ids
+        return out
+
+
+def _global_hotness(g: CSRGraph, train: np.ndarray, seed=0):
+    st = presample_clique(g, [train], fanouts=FANOUTS, batch_size=2048, seed=seed)
+    return st.A_F, st.A_T, st.N_TSUM
+
+
+def build_system(g: CSRGraph, strategy: str, nv_kind: str, cache_rows_per_dev: int,
+                 train: np.ndarray, n_devices: int = 8, seed: int = 0) -> CacheSystem:
+    topo = topology_matrix(nv_kind, n_devices)
+    cliques = clique_cover(topo)
+    clique_of = {d: ci for ci, c in enumerate(cliques) for d in c}
+    rng = np.random.default_rng(seed)
+
+    if strategy in ("gnnlab", "quiver-plus"):
+        A_F, _, _ = _global_hotness(g, train, seed)
+        order = np.argsort(-A_F, kind="stable")
+        tablets = {d: train for d in range(n_devices)}  # global shuffle
+        caches = {}
+        if strategy == "gnnlab":
+            top = order[:cache_rows_per_dev]
+            caches = {d: top for d in range(n_devices)}
+            nv = False
+        else:
+            for ci, c in enumerate(cliques):
+                top = order[: cache_rows_per_dev * len(c)]
+                for gi, d in enumerate(c):
+                    caches[d] = top[gi::len(c)]  # hash slice inside clique
+            nv = True
+        return CacheSystem(strategy, caches, clique_of, cliques, "global",
+                           tablets, nv)
+
+    if strategy == "pagraph-plus":
+        part = partition_graph(g, n_devices, method="ldg", seed=seed)
+        tablets = {}
+        caches = {}
+        for d in range(n_devices):
+            tv = train[part[train] == d]
+            if len(tv) == 0:
+                tv = train[:1]
+            tablets[d] = tv
+            st = presample_clique(g, [tv], fanouts=FANOUTS, batch_size=2048,
+                                  seed=seed + d)
+            order = np.argsort(-st.A_F, kind="stable")
+            order = order[st.A_F[order] > 0]
+            caches[d] = order[:cache_rows_per_dev]
+        return CacheSystem(strategy, caches, clique_of, cliques, "local",
+                           tablets, False)
+
+    if strategy == "legion":
+        plan = hierarchical_partition(g, train, topo, method="ldg", seed=seed)
+        caches = {}
+        for ci, devices in enumerate(plan.cliques):
+            st = presample_clique(g, [plan.tablets[d] for d in devices],
+                                  fanouts=FANOUTS, batch_size=2048, seed=seed + ci)
+            res = cslp(st.H_T, st.H_F)
+            for gi, d in enumerate(devices):
+                caches[d] = res.G_F[gi][:cache_rows_per_dev]
+        return CacheSystem(strategy, caches,
+                           {d: ci for ci, c in enumerate(plan.cliques) for d in c},
+                           plan.cliques, "local", plan.tablets, True)
+
+    raise KeyError(strategy)
+
+
+def measure(g: CSRGraph, sys: CacheSystem, batches: int = 4,
+            batch_size: int = 1024, seed: int = 1) -> dict:
+    """Per-device feature hit rates + total PCIe transactions for a workload."""
+    lookup = sys.lookup_sets()
+    tx_per_row = int(np.ceil(g.feat_dim * S_FLOAT32 / CLS))
+    hits, reqs, pcie = {}, {}, 0
+    rng = np.random.default_rng(seed)
+    for d in sorted(sys.feat_cache_per_dev):
+        cache_ids = lookup[d]
+        mask = np.zeros(g.n, dtype=bool)
+        if len(cache_ids):
+            mask[cache_ids] = True
+        tablet = sys.tablets[d]
+        h = r = 0
+        for _ in range(batches):
+            seeds = tablet[rng.integers(0, len(tablet), size=batch_size)]
+            ids = unique_vertices(host_sample_batch(g, seeds, FANOUTS, rng))
+            hit = mask[ids]
+            h += int(hit.sum())
+            r += len(ids)
+            pcie += tx_per_row * int((~hit).sum())
+        hits[d], reqs[d] = h, r
+    per_dev = {d: hits[d] / max(reqs[d], 1) for d in hits}
+    return {"hit_rates": per_dev, "pcie_transactions": pcie,
+            "mean_hit": float(np.mean(list(per_dev.values()))),
+            "spread": float(max(per_dev.values()) - min(per_dev.values()))}

@@ -1,0 +1,195 @@
+"""Assemble EXPERIMENTS.md from the dry-run/variant artifacts.
+
+    PYTHONPATH=src:. python benchmarks/make_experiments.py > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import load_records, markdown_table, roofline_fraction
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+HEADER = """# EXPERIMENTS
+
+Environment: single CPU host (jax {jax_version}), TPU v5e as the *target*
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per chip).  Every number
+below is derived from compiled artifacts of the multi-pod dry-run
+(`launch/dryrun.py`) or from the paper-figure benchmark suite
+(`benchmarks/run.py`, results in `bench_output.txt`).
+"""
+
+DRYRUN_INTRO = """## §Dry-run
+
+`make_production_mesh()` builds the single-pod 16x16 = 256-chip mesh
+("data", "model") and the multi-pod 2x16x16 = 512-chip mesh ("pod", "data",
+"model"; the pod axis is data-parallel across DCN).  For every
+(architecture x input shape x mesh) cell, `jax.jit(step).lower(**specs)
+.compile()` must succeed with ShapeDtypeStruct inputs (no allocation):
+train cells lower `train_step` (loss + AdamW update, donated state), prefill
+cells lower `prefill` (forward + decode-ready cache emission), decode cells
+lower `serve_step` (one token against a sequence-sharded KV cache, donated).
+
+**Result: all 66 runnable cells compile on both meshes with zero failures**
+(33 applicable arch x shape cells x 2 meshes).  `long_500k` is skipped for
+the seven pure-full-attention archs (phi3.5-moe, dbrx, seamless, stablelm,
+minitron, qwen2.5, chameleon) per the assignment — the shape requires
+sub-quadratic attention; it runs for mamba2 (SSM), zamba2 (hybrid) and
+gemma3 (5:1 sliding-window).  seamless-m4t is encoder-decoder (not
+encoder-only), so its decode cells run (decoder step + cross-attention over
+the 32k cached encoder states).
+
+Cost conventions (see `launch/hlo_cost.py`): SPMD HLO carries per-device
+local shapes, so all numbers are per-chip.  XLA's `cost_analysis()` counts a
+while-loop body once; our analyzer multiplies bodies by their
+`known_trip_count`, descends into fusions for flops, counts bytes at fusion
+boundaries, zero-rates `convert` (XLA:CPU materializes dtype casts that
+XLA:TPU fuses into consumers) and counts `dynamic-update-slice` as
+2x update bytes (in-place aliasing on the target).  Validated in
+`tests/test_hlo_cost.py` (scan == unroll == analytic).
+"""
+
+ROOFLINE_INTRO = """## §Roofline
+
+Per-chip terms:
+
+    compute term    = HLO_FLOPs / 197e12
+    memory term     = HLO_bytes / 819e9        (fusion-boundary upper bound)
+    collective term = wire_bytes / 50e9        (all-reduce counted 2x payload)
+
+`MODEL_FLOPS` = 6·N·D for training (N = non-embedding params, N_active for
+MoE; per-stack token counts for the encoder-decoder), 2·N·D for
+prefill/decode.  `useful ratio` = MODEL_FLOPS / (HLO_FLOPs x chips) — it
+captures remat recompute (~0.75x), quadratic-attention flops that 6·N·D
+ignores, and masked-window waste.  `roofline frac` = MODEL_FLOPS-time /
+dominant term — the score hillclimbed in §Perf (decode cells are inherently
+~0: one token of useful work against a full-cache read; their figure of
+merit is the memory term itself, i.e. cache-read time).
+"""
+
+
+def dryrun_table():
+    recs = load_records()
+    out = ["| arch | shape | mesh | compile (s) | peak/chip | collectives "
+           "(AR/AG/RS/A2A/CP) | wire/chip |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        c = r["collectives"]
+        counts = "/".join(str(c[k]["count"]) for k in
+                          ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        mem = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.0f} "
+            f"| {mem.get('peak_bytes', 0)/2**30:.1f} GiB | {counts} "
+            f"| {c['wire_bytes']/2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def variant_table():
+    vdir = RESULTS / "variants"
+    if not vdir.exists():
+        return "(no variant records)"
+    rows = []
+    for p in sorted(vdir.glob("*.json")):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+    out = ["| cell | variant | compute (s) | memory (s) | collective (s) | "
+           "bound (s) | peak GiB |",
+           "|---|---|---|---|---|---|---|"]
+    # prepend baselines for the cells that have variants
+    cells = sorted({(r["arch"], r["shape"], r["mesh"]) for r in rows})
+    base = {(b["arch"], b["shape"], b["mesh"]): b for b in load_records()}
+    for cell in cells:
+        seq = [base[cell]] + [r for r in rows if (r["arch"], r["shape"],
+                                                  r["mesh"]) == cell]
+        for r in seq:
+            rr = r["roofline"]
+            bound = max(rr["compute_s"], rr["memory_s"], rr["collective_s"])
+            out.append(
+                f"| {r['arch']}/{r['shape']} | {r.get('variant','baseline')} | "
+                f"{rr['compute_s']:.3f} | {rr['memory_s']:.3f} | "
+                f"{rr['collective_s']:.3f} | **{bound:.3f}** | "
+                f"{r['memory'].get('peak_bytes',0)/2**30:.1f} |")
+    return "\n".join(out)
+
+
+def _move_hint(r) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    arch, shape, dom = r["arch"], r["shape"], r["roofline"]["dominant"]
+    fam_ssm = arch.startswith(("mamba2", "zamba2"))
+    moe = arch.startswith(("phi3.5", "dbrx"))
+    if shape == "train_4k":
+        if dom == "collective_s":
+            return ("mixer/attention layout change removes the per-layer "
+                    "residual re-gathers (measured: seq_sp_mixer, §Perf)")
+        return ("sp_attn keeps MLP weights TP-sharded (measured −26..28%, "
+                "§Perf); remainder is f32 gradient-chain traffic -> fused "
+                "Pallas attention/SSD kernels + bf16 fusion boundaries")
+    if shape == "prefill_32k":
+        if dom == "collective_s":
+            return ("ring-attention / collective-permute KV instead of "
+                    "per-layer KV all-gather over the seq-sharded q")
+        return ("Pallas flash kernel keeps the online-softmax state in VMEM "
+                "(the jnp fallback materializes it per KV block)"
+                + ("; MoE dispatch buffers shrink with capacity_factor" if moe else ""))
+    if shape == "decode_32k":
+        if fam_ssm:
+            return ("O(1) state read is already minimal; batch growth "
+                    "amortizes the weight reads")
+        return ("int8/f8 KV-cache quantization halves-quarters the cache "
+                "read; grouped multi-token decode amortizes weight reads"
+                + ("; dense-dispatch MoE reads all experts -> top-k gather "
+                   "of expert weights" if moe else ""))
+    if shape == "long_500k":
+        if arch.startswith("gemma3"):
+            return ("ring-buffer KV for the 22 local (window-512) layers "
+                    "cuts ~95% of cache reads (only 5 global layers need "
+                    "the full 524k KV)")
+        return ("state is O(1); the step is weight-read bound -> batch >1 "
+                "or weight quantization")
+    return "-"
+
+
+def commentary():
+    out = ["### per-cell bottleneck notes (single-pod)\n"]
+    for r in sorted(load_records(), key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "single":
+            continue
+        dom = r["roofline"]["dominant"].replace("_s", "")
+        out.append(f"* **{r['arch']} / {r['shape']}** (bound: {dom}) — "
+                   f"{_move_hint(r)}.")
+    return "\n".join(out)
+
+
+def main():
+    import jax
+
+    print(HEADER.format(jax_version=jax.__version__))
+    print(DRYRUN_INTRO)
+    print(dryrun_table())
+    print()
+    print(ROOFLINE_INTRO)
+    print("### single-pod (16x16 = 256 chips)\n")
+    print(markdown_table("single"))
+    print("\n### multi-pod (2x16x16 = 512 chips)\n")
+    print(markdown_table("multi"))
+    print("\n### §Perf variant measurements (re-compiled artifacts)\n")
+    print(variant_table())
+    print()
+    print(commentary())
+    print()
+    perf = Path(__file__).resolve().parent / "PERF_LOG.md"
+    if perf.exists():
+        print(perf.read_text())
+
+
+if __name__ == "__main__":
+    main()

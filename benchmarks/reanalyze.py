@@ -1,0 +1,43 @@
+"""Re-derive cost fields of every dry-run JSON from its saved .hlo.gz
+(no recompilation) — used after hlo_cost refinements."""
+import gzip
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.hlo_cost import analyze
+
+
+def reanalyze(d: Path):
+    for jp in sorted(d.rglob("*.json")):
+        hp = Path(str(jp).replace(".json", ".hlo.gz"))
+        if not hp.exists():
+            continue
+        rec = json.load(open(jp))
+        if rec.get("status") != "ok":
+            continue
+        cost = analyze(gzip.open(hp, "rt").read())
+        colls = {k: {"count": int(v["count"]), "bytes": float(v["bytes"])}
+                 for k, v in cost["coll"].items()}
+        colls["total_bytes"] = cost["coll_total_bytes"]
+        colls["wire_bytes"] = cost["coll_wire_bytes"]
+        rec["flops_per_device"] = float(cost["flops"])
+        rec["bytes_per_device"] = float(cost["bytes"])
+        rec["collectives"] = colls
+        terms = {"compute_s": cost["flops"] / PEAK_FLOPS,
+                 "memory_s": cost["bytes"] / HBM_BW,
+                 "collective_s": cost["coll_wire_bytes"] / LINK_BW}
+        mf = rec["model_flops_detail"]["model_flops"]
+        rec["roofline"] = {**terms, "dominant": max(terms, key=terms.get),
+                           "model_flops": mf,
+                           "useful_flops_ratio": mf / max(cost["flops"] * rec["n_chips"], 1.0)}
+        json.dump(rec, open(jp, "w"), indent=2)
+        print(jp.name, rec["roofline"]["dominant"],
+              f"m={terms['memory_s']:.3f}s x={terms['collective_s']:.3f}s")
+
+
+if __name__ == "__main__":
+    reanalyze(Path(__file__).parent / "results" / "dryrun")

@@ -1,0 +1,83 @@
+"""Roofline aggregation: reads the dry-run JSON artifacts and renders the
+per-(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_records(variant: str = "baseline"):
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok" and r.get("variant", "baseline") == variant:
+            recs.append(r)
+    return recs
+
+
+def roofline_fraction(rec) -> float:
+    """Useful-compute fraction of the bound step time: MODEL_FLOPS-time over
+    the dominant roofline term (the score we hillclimb)."""
+    r = rec["roofline"]
+    model_time = r["model_flops"] / (rec["n_chips"] * 197e12)
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return model_time / max(bound, 1e-12)
+
+
+def table(recs=None, mesh="single"):
+    recs = recs if recs is not None else load_records()
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        rr = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rr["compute_s"], "memory_s": rr["memory_s"],
+            "collective_s": rr["collective_s"], "dominant": rr["dominant"],
+            "model_flops": rr["model_flops"],
+            "useful_ratio": rr["useful_flops_ratio"],
+            "roofline_frac": roofline_fraction(r),
+            "peak_gib": r.get("memory", {}).get("peak_bytes", 0) / 2**30,
+        })
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+    return rows
+
+
+def summary_rows():
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in table(mesh=mesh):
+            rows.append((
+                f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                r["roofline_frac"],
+                f"dom={r['dominant']} c={r['compute_s']:.3f}s "
+                f"m={r['memory_s']:.3f}s x={r['collective_s']:.3f}s "
+                f"peak={r['peak_gib']:.1f}GiB",
+            ))
+    return rows
+
+
+def markdown_table(mesh="single") -> str:
+    rows = table(mesh=mesh)
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | MODEL_FLOPS | useful ratio | roofline frac | peak GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | {r['model_flops']:.3e} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(markdown_table(mesh))

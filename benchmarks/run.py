@@ -1,0 +1,45 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV: us_per_call is the benchmark's
+wall time per measured unit; each figure's metric rows follow as
+``name,value,derived``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks.paper_figures import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    for name, fn in ALL_BENCHES:
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+            dt_us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt_us:.0f},ok rows={len(rows)}")
+            for rname, value, note in rows:
+                v = f"{value:.6g}" if isinstance(value, float) else value
+                print(f"{rname},{v},{note}")
+        except Exception as e:  # keep the harness running
+            dt_us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt_us:.0f},ERROR {type(e).__name__}: {e}")
+    # roofline summary (reads dry-run artifacts if present)
+    try:
+        from benchmarks.roofline import summary_rows
+
+        for rname, value, note in summary_rows():
+            v = f"{value:.6g}" if isinstance(value, float) else value
+            print(f"{rname},{v},{note}")
+    except Exception as e:
+        print(f"roofline,0,SKIPPED {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Legion's technique on an LM workload: hotness-aware embedding cache.
+
+Token frequency in LM batches is Zipfian — the same skew as graph-feature
+access.  We reuse the identical pipeline (pre-sampling -> CSLP -> cost
+model) over token streams to plan a hot-embedding HBM cache for gemma3's
+262k-row table, and validate the plan's hit rate on held-out batches.
+
+    PYTHONPATH=src python examples/lm_embedding_cache.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.cost_model import CliqueCostModel
+from repro.core.cslp import cslp
+from repro.graph.csr import CSRGraph
+
+VOCAB, D_MODEL, SEQ, BATCH = 262_144, 1152, 512, 8
+rng = np.random.default_rng(0)
+
+def sample_tokens(n):  # Zipf-distributed token ids (alpha ~1.1, LM-like)
+    z = rng.zipf(1.3, size=n)
+    return np.minimum(z - 1, VOCAB - 1)
+
+# "pre-sampling": hotness from one epoch of batches, per device (K_g = 4)
+K_G = 4
+H_F = np.zeros((K_G, VOCAB), dtype=np.int64)
+for dev in range(K_G):
+    for _ in range(16):
+        toks = sample_tokens(BATCH * SEQ)
+        np.add.at(H_F[dev], toks, 1)
+res = cslp(np.zeros_like(H_F), H_F)  # no topology half for embeddings
+
+# degenerate CSR so the cost model sees a pure feature table
+g = CSRGraph(indptr=np.zeros(VOCAB + 1, np.int64),
+             indices=np.zeros(0, np.int32), n=VOCAB, feat_dim=D_MODEL)
+cm = CliqueCostModel.build(g, res, n_tsum=0)
+budget = 64e6 * K_G  # 64 MB of HBM per chip for the embedding cache
+plan = cm.plan(budget)
+rows = cm.feat_cached_count(plan["m_F"])
+print(f"planned: cache {rows} hot rows ({rows/VOCAB:.1%} of vocab), "
+      f"alpha={plan['alpha']:.2f} (all feature, as expected)")
+
+# validate on held-out batches
+cached = np.zeros(VOCAB, bool)
+take = res.Q_F[:rows]
+cached[take] = True
+hits = total = 0
+for _ in range(8):
+    toks = sample_tokens(BATCH * SEQ)
+    hits += int(cached[toks].sum())
+    total += len(toks)
+print(f"held-out embedding-row hit rate: {hits/total:.1%} "
+      f"(random placement would give {rows/VOCAB:.1%})")

@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, applicable_shapes
+
+_ARCH_MODULES = {
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "dbrx-132b": "dbrx",
+    "seamless-m4t-large-v2": "seamless",
+    "stablelm-3b": "stablelm",
+    "minitron-4b": "minitron",
+    "gemma3-1b": "gemma3",
+    "qwen2.5-14b": "qwen25",
+    "zamba2-1.2b": "zamba2",
+    "mamba2-780m": "mamba2_780m",
+    "chameleon-34b": "chameleon",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG

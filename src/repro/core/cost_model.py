@@ -1,0 +1,129 @@
+"""Automatic cache management cost model (paper §4.3, Eq. 2–6).
+
+Given one clique's hotness/order vectors and its memory budget B, find the
+topology:feature split minimizing predicted PCIe transactions:
+
+  N_total(α) = N_T(m_T = αB) + N_F(m_F = (1-α)B)
+
+* N_T  (Eq. 3–4): fill topology cache along Q_T until αB; the remaining
+  (uncached) topology hotness fraction scales the measured N_TSUM.
+* N_F  (Eq. 5–6): fill feature cache along Q_F until (1-α)B; each uncached
+  vertex access costs ceil(D*s_float32 / CLS) transactions.
+* Plan (paper): sweep α in Δα=0.01 steps.
+
+Beyond-paper: ``plan_knapsack`` — treat every (vertex, kind) pair as a
+fractional-knapsack item with gain-density = ΔN/Δbytes and fill greedily.
+Because both curves are concave (hotness-sorted), the greedy merge is optimal
+up to one item, strictly dominating the α grid; it also removes the manual
+Δα hyper-parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.cslp import CSLPResult
+from repro.core.hotness import CLS, S_FLOAT32, S_UINT32, S_UINT64
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class CliqueCostModel:
+    """Cost model for one clique (all sizes in bytes, per clique)."""
+
+    A_T: np.ndarray
+    A_F: np.ndarray
+    Q_T: np.ndarray
+    Q_F: np.ndarray
+    N_TSUM: int
+    topo_bytes: np.ndarray  # per-vertex CSR bytes, aligned with Q_T order
+    feat_bytes: int  # bytes per feature row
+    # cumulative views along the priority orders
+    topo_csum_bytes: np.ndarray = dataclasses.field(init=False)
+    topo_csum_hot: np.ndarray = dataclasses.field(init=False)
+    feat_csum_hot: np.ndarray = dataclasses.field(init=False)
+    feat_tx_per_vertex: int = dataclasses.field(init=False)
+
+    @classmethod
+    def build(cls, g: CSRGraph, cslp_res: CSLPResult, n_tsum: int):
+        topo_bytes = g.topology_bytes(cslp_res.Q_T)
+        return cls(A_T=cslp_res.A_T, A_F=cslp_res.A_F, Q_T=cslp_res.Q_T,
+                   Q_F=cslp_res.Q_F, N_TSUM=n_tsum, topo_bytes=topo_bytes,
+                   feat_bytes=g.feature_bytes_per_vertex())
+
+    def __post_init__(self):
+        self.topo_csum_bytes = np.concatenate(
+            [[0], np.cumsum(self.topo_bytes, dtype=np.float64)])
+        hot_t = self.A_T[self.Q_T].astype(np.float64)
+        self.topo_csum_hot = np.concatenate([[0], np.cumsum(hot_t)])
+        hot_f = self.A_F[self.Q_F].astype(np.float64)
+        self.feat_csum_hot = np.concatenate([[0], np.cumsum(hot_f)])
+        self.feat_tx_per_vertex = int(np.ceil(self.feat_bytes / CLS))
+
+    # ---- Eq. 3/4 ----
+    def topo_cached_count(self, m_T: float) -> int:
+        return int(np.searchsorted(self.topo_csum_bytes, m_T, side="right")) - 1
+
+    def N_T(self, m_T: float) -> float:
+        total_hot = self.topo_csum_hot[-1]
+        if total_hot == 0:
+            return 0.0
+        k = self.topo_cached_count(m_T)
+        cached_hot = self.topo_csum_hot[k]
+        return float(self.N_TSUM) * (1.0 - cached_hot / total_hot)
+
+    # ---- Eq. 5/6 ----
+    def feat_cached_count(self, m_F: float) -> int:
+        return min(int(m_F // self.feat_bytes), len(self.Q_F))
+
+    def N_F(self, m_F: float) -> float:
+        k = self.feat_cached_count(m_F)
+        uncached_hot = self.feat_csum_hot[-1] - self.feat_csum_hot[k]
+        return self.feat_tx_per_vertex * float(uncached_hot)
+
+    def N_total(self, B: float, alpha: float) -> float:
+        return self.N_T(B * alpha) + self.N_F(B * (1.0 - alpha))
+
+    # ---- cache planning: paper's Δα sweep ----
+    def plan(self, B: float, d_alpha: float = 0.01) -> dict:
+        alphas = np.arange(0.0, 1.0 + 1e-9, d_alpha)
+        totals = np.array([self.N_total(B, a) for a in alphas])
+        i = int(np.argmin(totals))
+        a = float(alphas[i])
+        return {"alpha": a, "m_T": B * a, "m_F": B * (1 - a),
+                "N_T": self.N_T(B * a), "N_F": self.N_F(B * (1 - a)),
+                "N_total": float(totals[i]),
+                "curve": {"alpha": alphas, "N_total": totals},
+                "method": "alpha_sweep"}
+
+    # ---- beyond-paper: greedy gain-density knapsack ----
+    def plan_knapsack(self, B: float) -> dict:
+        total_hot_t = max(self.topo_csum_hot[-1], 1.0)
+        # per-item gains (transactions saved) and sizes (bytes)
+        gain_t = self.N_TSUM * (self.A_T[self.Q_T] / total_hot_t)
+        size_t = self.topo_bytes.astype(np.float64)
+        gain_f = self.feat_tx_per_vertex * self.A_F[self.Q_F].astype(np.float64)
+        size_f = np.full(len(self.Q_F), float(self.feat_bytes))
+        dens = np.concatenate([gain_t / np.maximum(size_t, 1), gain_f / size_f])
+        kind = np.concatenate([np.zeros(len(gain_t), np.int8),
+                               np.ones(len(gain_f), np.int8)])
+        size = np.concatenate([size_t, size_f])
+        gain = np.concatenate([gain_t, gain_f])
+        order = np.argsort(-dens, kind="stable")
+        csize = np.cumsum(size[order])
+        take = csize <= B
+        taken = order[take]
+        t_taken = taken[kind[taken] == 0]
+        f_taken = taken[kind[taken] == 1]
+        m_T = float(size[t_taken].sum()) if len(t_taken) else 0.0
+        m_F = float(size[f_taken].sum()) if len(f_taken) else 0.0
+        # exact evaluation from the per-item gains (taken sets need not be
+        # prefixes of Q_T/Q_F — that freedom *is* the improvement)
+        n_t = float(self.N_TSUM) - float(gain[t_taken].sum())
+        n_f = self.feat_tx_per_vertex * float(self.feat_csum_hot[-1]) - float(
+            gain[f_taken].sum())
+        return {"alpha": m_T / max(B, 1), "m_T": m_T, "m_F": m_F,
+                "N_T": n_t, "N_F": n_f, "N_total": n_t + n_f,
+                "method": "knapsack"}

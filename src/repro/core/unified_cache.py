@@ -1,0 +1,212 @@
+"""Hotness-aware unified cache (paper §4.2): topology + features in device
+memory, sliced across the devices of one clique.
+
+Structures (per clique):
+* feature cache — 2-D array of hot-vertex feature rows, slot-major by owning
+  device; ``feat_pos[v]`` maps vertex -> global slot (-1 = miss),
+  ``feat_owner[slot]`` -> device (for the GPU-GPU traffic matrix).
+* topology cache — CSR subset of hot adjacency lists (``topo_pos[v]`` -> row).
+
+The device arrays are jnp (HBM-resident on TPU; gathers go through the Pallas
+kernel in repro.kernels).  ``TrafficCounter`` accounts every miss in PCIe
+transactions with the same CLS granularity as the cost model, and every
+intra-clique remote hit as ICI/NVLink traffic — this is what the Fig. 2/8/10
+benchmarks read out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.hotness import CLS, S_FLOAT32, S_UINT32, S_UINT64
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class TrafficCounter:
+    n_devices: int
+    # traffic[dst, src]: src == n_devices means CPU (PCIe); else peer device
+    bytes_matrix: np.ndarray = None
+    pcie_transactions: int = 0
+    feature_requests: int = 0
+    feature_hits: int = 0
+    topo_requests: int = 0
+    topo_hits: int = 0
+
+    def __post_init__(self):
+        if self.bytes_matrix is None:
+            self.bytes_matrix = np.zeros(
+                (self.n_devices, self.n_devices + 1), dtype=np.int64)
+
+    def merge(self, other: "TrafficCounter"):
+        self.bytes_matrix += other.bytes_matrix
+        self.pcie_transactions += other.pcie_transactions
+        self.feature_requests += other.feature_requests
+        self.feature_hits += other.feature_hits
+        self.topo_requests += other.topo_requests
+        self.topo_hits += other.topo_hits
+
+    @property
+    def feature_hit_rate(self) -> float:
+        return self.feature_hits / max(self.feature_requests, 1)
+
+    @property
+    def topo_hit_rate(self) -> float:
+        return self.topo_hits / max(self.topo_requests, 1)
+
+
+class CliqueCache:
+    """One clique's unified cache."""
+
+    def __init__(self, g: CSRGraph, devices: Sequence[int],
+                 feat_ids_per_dev: Sequence[np.ndarray],
+                 topo_ids_per_dev: Sequence[np.ndarray],
+                 materialize: bool = True):
+        self.g = g
+        self.devices = list(devices)
+        k_g = len(devices)
+        # ---- feature cache ----
+        self.feat_pos = np.full(g.n, -1, dtype=np.int64)
+        owners = []
+        all_ids = []
+        for gi, ids in enumerate(feat_ids_per_dev):
+            all_ids.append(ids)
+            owners.append(np.full(len(ids), gi, dtype=np.int32))
+        ids = np.concatenate(all_ids) if all_ids else np.zeros(0, np.int64)
+        self.feat_ids = ids.astype(np.int64)
+        self.feat_owner = (np.concatenate(owners) if owners
+                           else np.zeros(0, np.int32))
+        self.feat_pos[self.feat_ids] = np.arange(len(self.feat_ids))
+        # ---- topology cache (CSR subset) ----
+        tids = (np.concatenate(topo_ids_per_dev) if topo_ids_per_dev
+                else np.zeros(0, np.int64)).astype(np.int64)
+        self.topo_ids = tids
+        self.topo_pos = np.full(g.n, -1, dtype=np.int64)
+        self.topo_pos[tids] = np.arange(len(tids))
+        deg = (g.indptr[tids + 1] - g.indptr[tids]) if len(tids) else np.zeros(0, np.int64)
+        self.cache_indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+        if materialize:
+            self.feat_cache = g.get_features(self.feat_ids) if len(self.feat_ids) else np.zeros((0, g.feat_dim), np.float32)
+            idx_chunks = [g.neighbors(v) for v in tids]
+            self.cache_indices = (np.concatenate(idx_chunks).astype(np.int32)
+                                  if idx_chunks else np.zeros(0, np.int32))
+        else:
+            self.feat_cache = None
+            self.cache_indices = None
+        self._device_arrays = None
+
+    # ---- device residency ----
+    def device_arrays(self):
+        """jnp copies (lazy): the HBM-resident cache halves."""
+        if self._device_arrays is None:
+            import jax.numpy as jnp
+
+            self._device_arrays = {
+                "feat_cache": jnp.asarray(self.feat_cache),
+                "feat_pos": jnp.asarray(self.feat_pos),
+                "cache_indptr": jnp.asarray(self.cache_indptr),
+                "cache_indices": jnp.asarray(self.cache_indices),
+                "topo_pos": jnp.asarray(self.topo_pos),
+            }
+        return self._device_arrays
+
+    def device_sample_cached(self, seeds, fanout: int, key):
+        """Fixed-fanout neighbor sampling *on device* from the HBM-resident
+        topology cache (the TPU analogue of Legion's GPU sampling).
+
+        Seeds whose adjacency is cached sample from the cache CSR; misses
+        return -1 rows for the host pipeline to fill (and account as PCIe).
+        Returns (neighbors (B, fanout) int32, hit_mask (B,) bool).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        da = self.device_arrays()
+        seeds = jnp.asarray(seeds, jnp.int32)
+        pos = da["topo_pos"][seeds]
+        hit = pos >= 0
+        safe = jnp.maximum(pos, 0)
+        start = da["cache_indptr"][safe]
+        deg = da["cache_indptr"][safe + 1] - start
+        r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
+        offs = r % jnp.maximum(deg, 1)[:, None]
+        idx = jnp.minimum(start[:, None] + offs,
+                          max(len(self.cache_indices) - 1, 0))
+        out = da["cache_indices"][idx].astype(jnp.int32)
+        ok = hit & (deg > 0)
+        return jnp.where(ok[:, None], out, -1), hit
+
+    @property
+    def feat_bytes(self) -> int:
+        return len(self.feat_ids) * self.g.feat_dim * S_FLOAT32
+
+    @property
+    def topo_bytes(self) -> int:
+        return int(self.cache_indptr[-1]) * S_UINT32 + len(self.topo_ids) * S_UINT64
+
+    # ---- accounting + extraction ----
+    def extract_features(self, ids: np.ndarray, requester_dev: int,
+                         counter: Optional[TrafficCounter] = None) -> np.ndarray:
+        """Gather rows for `ids` (unique sampled vertices of one batch),
+        accounting hits (local/peer) and misses (CPU over PCIe)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        pos = self.feat_pos[ids]
+        hit = pos >= 0
+        out = np.empty((len(ids), self.g.feat_dim), dtype=np.float32)
+        if hit.any():
+            out[hit] = self.feat_cache[pos[hit]]
+        if (~hit).any():
+            out[~hit] = self.g.get_features(ids[~hit])
+        if counter is not None:
+            row_bytes = self.g.feat_dim * S_FLOAT32
+            tx_per_row = int(np.ceil(row_bytes / CLS))
+            counter.feature_requests += len(ids)
+            counter.feature_hits += int(hit.sum())
+            counter.pcie_transactions += tx_per_row * int((~hit).sum())
+            counter.bytes_matrix[requester_dev, -1] += row_bytes * int((~hit).sum())
+            if hit.any():
+                owners = self.feat_owner[pos[hit]]
+                for gi in range(len(self.devices)):
+                    cnt = int((owners == gi).sum())
+                    if cnt:
+                        counter.bytes_matrix[requester_dev, self.devices[gi] % counter.n_devices] += row_bytes * cnt
+        return out
+
+    def sample_accounting(self, srcs: np.ndarray, fanout: int,
+                          counter: TrafficCounter, requester_dev: int):
+        """Account one sampling level: adjacency reads of `srcs` hit the topo
+        cache or cost PCIe transactions (Eq. 3/4 granularity)."""
+        srcs = np.asarray(srcs, dtype=np.int64)
+        srcs = srcs[srcs >= 0]
+        pos = self.topo_pos[srcs]
+        hit = pos >= 0
+        counter.topo_requests += len(srcs)
+        counter.topo_hits += int(hit.sum())
+        miss = srcs[~hit]
+        if len(miss):
+            deg = self.g.indptr[miss + 1] - self.g.indptr[miss]
+            tx = np.ceil(deg * S_UINT32 / CLS).astype(np.int64) + 1
+            counter.pcie_transactions += int(tx.sum())
+            counter.bytes_matrix[requester_dev, -1] += int((deg * S_UINT32).sum())
+
+
+def build_clique_cache(g: CSRGraph, devices, cslp_res, cost_plan: dict,
+                       mem_per_device: float, materialize: bool = True) -> CliqueCache:
+    """Fill per-device queues until the planned per-device budgets (§4.2 S3)."""
+    k_g = len(devices)
+    alpha = cost_plan["m_T"] / max(cost_plan["m_T"] + cost_plan["m_F"], 1)
+    feat_ids, topo_ids = [], []
+    for gi in range(k_g):
+        bt = mem_per_device * alpha
+        bf = mem_per_device * (1 - alpha)
+        # topology: fill G_T[gi] until bt bytes
+        q = cslp_res.G_T[gi]
+        b = np.cumsum(g.topology_bytes(q)) if len(q) else np.zeros(0)
+        topo_ids.append(q[: int(np.searchsorted(b, bt, side="right"))])
+        # features: fixed row size
+        q = cslp_res.G_F[gi]
+        nrows = int(bf // g.feature_bytes_per_vertex())
+        feat_ids.append(q[:nrows])
+    return CliqueCache(g, devices, feat_ids, topo_ids, materialize=materialize)

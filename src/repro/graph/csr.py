@@ -1,0 +1,134 @@
+"""Host-resident CSR graphs + synthetic generators + the paper's datasets.
+
+Graph topology and features live in host memory (the paper's CPU side; our
+TPU host).  Features for large graphs are *virtual*: rows are generated
+deterministically from the vertex id (hash-based), so billion-scale profiles
+never materialize — exactly what the cost model and cache planner need, while
+small graphs materialize real arrays for end-to-end training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.utils import stable_hash_u32
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray  # int64 (n+1,)
+    indices: np.ndarray  # int32 (nnz,)
+    n: int
+    feat_dim: int
+    n_classes: int = 32
+    features: Optional[np.ndarray] = None  # (n, D) f32, or None -> virtual
+    seed: int = 0
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return (self.indptr[1:] - self.indptr[:-1]).astype(np.int64)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v]: self.indptr[v + 1]]
+
+    label_signal: float = 0.5  # feature<->label correlation (learnability)
+
+    def get_features(self, ids: np.ndarray) -> np.ndarray:
+        """Feature rows for ids; virtual rows are hash-generated on the fly.
+        Rows carry a label-dependent offset in the first n_classes dims so
+        node classification is learnable (convergence experiments)."""
+        if self.features is not None:
+            return self.features[ids]
+        ids = np.asarray(ids, dtype=np.int64)
+        base = ids[:, None] * np.int64(self.feat_dim) + np.arange(self.feat_dim)
+        h = stable_hash_u32(base, salt=self.seed)
+        f = (h.astype(np.float32) / 2**32 - 0.5).astype(np.float32)
+        if self.label_signal:
+            lab = self.get_labels(ids)
+            cols = lab % min(self.n_classes, self.feat_dim)
+            f[np.arange(len(ids)), cols] += self.label_signal
+        return f
+
+    def get_labels(self, ids: np.ndarray) -> np.ndarray:
+        h = stable_hash_u32(np.asarray(ids, dtype=np.int64), salt=self.seed + 7)
+        return (h % np.uint32(self.n_classes)).astype(np.int32)
+
+    def topology_bytes(self, ids: Optional[np.ndarray] = None,
+                       s_uint32: int = 4, s_uint64: int = 8) -> np.ndarray:
+        """Per-vertex CSR storage cost (paper Eq. 3): nc(v)*4 + 8."""
+        deg = self.degrees() if ids is None else (
+            self.indptr[np.asarray(ids) + 1] - self.indptr[np.asarray(ids)])
+        return deg * s_uint32 + s_uint64
+
+    def feature_bytes_per_vertex(self, s_float32: int = 4) -> int:
+        return self.feat_dim * s_float32
+
+
+def powerlaw_graph(n: int, avg_degree: int, alpha: float = 0.8, seed: int = 0,
+                   feat_dim: int = 64, materialize_features: bool = False,
+                   n_classes: int = 32) -> CSRGraph:
+    """Chung-Lu style power-law graph: endpoint probability ∝ rank^-alpha.
+
+    Degree skew mirrors the web/social graphs in the paper (hot vertices are
+    both high-out-degree and frequently sampled).
+    """
+    rng = np.random.default_rng(seed)
+    m = n * avg_degree
+    w = (np.arange(1, n + 1, dtype=np.float64)) ** (-alpha)
+    w /= w.sum()
+    # permute so vertex id isn't correlated with hotness
+    perm = rng.permutation(n)
+    src = perm[rng.choice(n, size=m, p=w)]
+    dst = perm[rng.choice(n, size=m, p=w)]
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    g = CSRGraph(indptr=indptr, indices=dst.astype(np.int32), n=n,
+                 feat_dim=feat_dim, n_classes=n_classes, seed=seed)
+    if materialize_features:
+        g.features = g.get_features(np.arange(n))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 2 dataset profiles.  `sim_scale` maps a profile to a runnable
+# synthetic instance; planner/cost-model paths also accept the full-scale
+# profile analytically (they only need degrees/hotness/sizes).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    name: str
+    n_vertices: int
+    n_edges: int
+    feat_dim: int
+    train_fraction: float = 0.10
+
+
+PAPER_DATASETS = {
+    "PR": DatasetProfile("products", 2_400_000, 120_000_000, 100),
+    "PA": DatasetProfile("paper100m", 111_000_000, 1_600_000_000, 128),
+    "CO": DatasetProfile("com-friendster", 65_000_000, 1_800_000_000, 256),
+    "UKS": DatasetProfile("uk-union", 133_000_000, 5_500_000_000, 256),
+    "UKL": DatasetProfile("uk-2014", 790_000_000, 47_200_000_000, 128),
+    "CL": DatasetProfile("clue-web", 1_000_000_000, 42_500_000_000, 128),
+}
+
+
+def synthetic_instance(profile_key: str, max_vertices: int = 200_000,
+                       seed: int = 0) -> CSRGraph:
+    """A runnable scaled-down instance of a paper dataset profile, preserving
+    average degree, feature dim, and power-law skew."""
+    p = PAPER_DATASETS[profile_key]
+    n = min(p.n_vertices, max_vertices)
+    avg_deg = max(int(p.n_edges / p.n_vertices), 2)
+    return powerlaw_graph(n, min(avg_deg, 64), seed=seed, feat_dim=p.feat_dim)

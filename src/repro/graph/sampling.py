@@ -1,0 +1,91 @@
+"""Fixed-fanout neighbor sampling (GraphSAGE-style, 2-hop 25x10 default).
+
+Two equivalent implementations:
+
+* ``host_sample_batch``  — vectorized numpy; drives pre-sampling (the paper
+  stores topology in CPU memory during pre-sampling) and the host side of the
+  training pipeline.
+* ``device_sample``      — pure-jnp sampler over device-resident CSR arrays
+  (the unified cache's topology half lives in HBM; cached vertices sample on
+  device — the TPU analogue of the paper's GPU sampling).
+
+Both sample uniformly *with replacement* (the paper's uniform random neighbor
+sampling); zero-degree vertices yield -1 padding.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def host_sample_level(g: CSRGraph, seeds: np.ndarray, fanout: int,
+                      rng: np.random.Generator) -> np.ndarray:
+    """(B,) seeds -> (B, fanout) sampled neighbors (-1 where deg==0).
+    seeds < 0 propagate -1."""
+    seeds = np.asarray(seeds, dtype=np.int64)
+    valid = seeds >= 0
+    sv = np.where(valid, seeds, 0)
+    start = g.indptr[sv]
+    deg = g.indptr[sv + 1] - start
+    r = rng.integers(0, 1 << 31, size=(len(seeds), fanout))
+    has = (deg > 0) & valid
+    offs = r % np.maximum(deg, 1)[:, None]
+    idx = start[:, None] + offs
+    out = g.indices[np.minimum(idx, g.nnz - 1)].astype(np.int64)
+    out = np.where(has[:, None], out, -1)
+    return out
+
+
+def host_sample_batch(g: CSRGraph, seeds: np.ndarray, fanouts: Sequence[int],
+                      rng: np.random.Generator) -> List[np.ndarray]:
+    """Multi-hop sample: returns [seeds (B,), hop1 (B,f1), hop2 (B,f1,f2), ...]."""
+    levels = [np.asarray(seeds, dtype=np.int64)]
+    frontier = levels[0]
+    shape = (len(frontier),)
+    for f in fanouts:
+        nxt = host_sample_level(g, frontier.reshape(-1), f, rng)
+        shape = shape + (f,)
+        levels.append(nxt.reshape(shape))
+        frontier = levels[-1]
+    return levels
+
+
+def device_sample_level(indptr: jax.Array, indices: jax.Array,
+                        seeds: jax.Array, fanout: int, key: jax.Array):
+    """jnp version of host_sample_level (device CSR arrays)."""
+    valid = seeds >= 0
+    sv = jnp.where(valid, seeds, 0)
+    start = indptr[sv]
+    deg = indptr[sv + 1] - start
+    r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
+    offs = r % jnp.maximum(deg, 1)[:, None]
+    idx = start[:, None] + offs
+    out = indices[jnp.minimum(idx, indices.shape[0] - 1)].astype(jnp.int32)
+    has = (deg > 0) & valid
+    return jnp.where(has[:, None], out, -1)
+
+
+def device_sample(indptr: jax.Array, indices: jax.Array, seeds: jax.Array,
+                  fanouts: Sequence[int], key: jax.Array):
+    levels = [seeds.astype(jnp.int32)]
+    frontier = levels[0]
+    shape = (seeds.shape[0],)
+    for i, f in enumerate(fanouts):
+        k = jax.random.fold_in(key, i)
+        nxt = device_sample_level(indptr, indices, frontier.reshape(-1), f, k)
+        shape = shape + (f,)
+        levels.append(nxt.reshape(shape))
+        frontier = levels[-1]
+    return levels
+
+
+def unique_vertices(levels: List[np.ndarray]) -> np.ndarray:
+    """All distinct non-negative vertex ids appearing in a sampled subgraph."""
+    flat = np.concatenate([l.reshape(-1) for l in levels])
+    flat = flat[flat >= 0]
+    return np.unique(flat)

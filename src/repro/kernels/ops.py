@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernel bodies execute as jax ops —
+the validation mode for this container) and False on TPU (real Mosaic
+lowering).  The wrappers keep the oracle-identical signatures from ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather import gather_rows_pallas
+from repro.kernels.sage_agg import sage_aggregate_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(table: jax.Array, idx: jax.Array, interpret: bool = True):
+    return gather_rows_pallas(table, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def sage_aggregate(table: jax.Array, idx: jax.Array, weights: jax.Array,
+                   interpret: bool = True):
+    return sage_aggregate_pallas(table, idx, weights, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+__all__ = ["gather_rows", "sage_aggregate", "flash_attention", "ref"]

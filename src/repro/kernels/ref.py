@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = table[idx[i]]; idx < 0 yields zeros (cache-miss slots)."""
+    safe = jnp.maximum(idx, 0)
+    out = table[safe]
+    return jnp.where((idx >= 0)[:, None], out, 0).astype(table.dtype)
+
+
+def sage_aggregate(table: jax.Array, idx: jax.Array, weights: jax.Array):
+    """Fused gather + weighted sum: out[b] = sum_f w[b,f] * table[idx[b,f]].
+
+    idx: (B, F) int32, negatives = padding; weights: (B, F) f32 (callers pass
+    1/valid_count for the masked-mean aggregation).
+    """
+    safe = jnp.maximum(idx, 0)
+    rows = table[safe]  # (B, F, D)
+    w = jnp.where(idx >= 0, weights, 0.0)
+    return jnp.einsum("bfd,bf->bd", rows.astype(jnp.float32), w).astype(table.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """Plain softmax attention; q/k/v: (BH, S, Dh) (heads pre-flattened)."""
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost analysis + the collective schedule.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere).  One cell per invocation:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k --mesh single
+
+or the whole sweep (spawns one subprocess per cell for isolation):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import math
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective in the optimized HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    # e.g.:  %all-reduce.5 = f32[128,128]{1,0} all-reduce(%dot.1), ...
+    line_re = re.compile(
+        r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\(")
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":  # avoid double counting async pairs
+            continue
+        restype, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_re.findall(restype):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    # all-reduce moves ~2x its payload on a ring (reduce-scatter + all-gather)
+    out["wire_bytes"] = out["total_bytes"] + out["all-reduce"]["bytes"]
+    return out
+
+
+def model_flops_estimate(cfg, shape) -> dict:
+    """MODEL_FLOPS = 6 * N * D (N_active for MoE), N excluding embeddings."""
+    from repro.models import get_module
+    from repro.models.params import Def, is_def
+    import jax
+
+    defs = get_module(cfg).defs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)[0]
+    n_total = n_expert = n_embed = 0
+    for path, d in flat:
+        n = math.prod(d.shape)
+        keys = "/".join(str(p) for p in path)
+        if "embed'" in keys or "lm_head" in keys or "dec_embed" in keys:
+            n_embed += n
+            continue
+        n_total += n
+        if "experts" in d.axes:
+            n_expert += n
+    n_active = n_total - n_expert * (1 - cfg.top_k / max(cfg.n_experts, 1)) \
+        if cfg.n_experts else n_total
+    mult = 6 if shape.kind == "train" else 2
+    if cfg.family in ("audio", "encdec"):
+        # enc tokens traverse only encoder params (and vice versa)
+        frac_enc = cfg.n_enc_layers / max(cfg.n_enc_layers + cfg.n_dec_layers, 1)
+        n_enc, n_dec = n_total * frac_enc, n_total * (1 - frac_enc)
+        if shape.kind == "decode":
+            t_enc, t_dec = 0, shape.global_batch
+        else:
+            t_enc = shape.global_batch * shape.seq_len
+            t_dec = shape.global_batch * max(shape.seq_len // cfg.target_ratio, 16)
+        mf = mult * (n_enc * t_enc + n_dec * t_dec)
+        tokens = t_enc + t_dec
+    else:
+        tokens = (shape.global_batch if shape.kind == "decode"
+                  else shape.global_batch * shape.seq_len)
+        mf = mult * n_active * tokens
+    return {"n_params_nonembed": int(n_total), "n_params_embed": int(n_embed),
+            "n_active": int(n_active), "tokens": int(tokens),
+            "model_flops": float(mf)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path=None,
+             variant: str = "baseline") -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES, applicable_shapes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    from repro.launch.variants import apply_variant
+
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped",
+               "reason": "long_500k needs sub-quadratic attention "
+                         "(pure full-attention arch; see DESIGN.md)"}
+        if out_path:
+            Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=2)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh)
+    donate = (0,) if cell.meta["kind"] == "train" else ((1,) if cell.meta["kind"] == "decode" else ())
+    jfn = jax.jit(cell.fn, out_shardings=cell.out_shardings,
+                  donate_argnums=donate)
+    with jax.set_mesh(mesh):
+        lowered = jfn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    # Trip-count-aware cost attribution (XLA's HloCostAnalysis counts while
+    # bodies once; scan-over-layers models need body x trip_count).
+    from repro.launch.hlo_cost import analyze
+
+    hlo_text = compiled.as_text()
+    cost = analyze(hlo_text)
+    colls = {k: {"count": int(v["count"]), "bytes": float(v["bytes"])}
+             for k, v in cost["coll"].items()}
+    colls["total_bytes"] = cost["coll_total_bytes"]
+    colls["wire_bytes"] = cost["coll_wire_bytes"]
+    flops_dev = float(cost["flops"])
+    bytes_dev = float(cost["bytes"])
+    mf = model_flops_estimate(cfg, shape)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = colls["wire_bytes"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = mf["model_flops"] / max(flops_dev * n_chips, 1.0)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "xla_cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes": float(ca.get("bytes accessed", 0.0))},
+        "memory": mem, "collectives": colls,
+        "roofline": {**terms, "dominant": dominant,
+                     "model_flops": mf["model_flops"],
+                     "useful_flops_ratio": useful},
+        "model_flops_detail": mf,
+    }
+    if out_path:
+        Path(out_path).parent.mkdir(parents=True, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        import gzip
+
+        with gzip.open(str(out_path).replace(".json", ".hlo.gz"), "wt") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    if not args.all:
+        out = args.out or str(RESULTS_DIR / f"{args.arch}__{args.shape}__{args.mesh}.json")
+        rec = run_cell(args.arch, args.shape, args.mesh, out_path=out,
+                       variant=args.variant)
+        dom = rec.get("roofline", {}).get("dominant", "-")
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "status")
+                          if k in rec} | {"dominant": dom}))
+        return
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.configs.base import applicable_shapes
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    from repro.configs.base import SHAPES
+
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:  # non-applicable cells produce skip records
+            for m in meshes:
+                cells.append((arch, shape, m))
+    print(f"dry-run sweep: {len(cells)} cells")
+    failures = []
+    for i, (arch, shape, m) in enumerate(cells):
+        out = RESULTS_DIR / f"{arch}__{shape}__{m}.json"
+        if out.exists():
+            print(f"[{i+1}/{len(cells)}] {arch} {shape} {m}: cached")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", m, "--out", str(out)]
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = r.returncode == 0
+            tail = (r.stdout + r.stderr).strip().splitlines()[-1:] or [""]
+            print(f"[{i+1}/{len(cells)}] {arch} {shape} {m}: "
+                  f"{'ok' if ok else 'FAIL'} ({time.time()-t0:.0f}s) {tail[0][:160]}")
+            if not ok:
+                failures.append((arch, shape, m, tail[0][:500]))
+        except subprocess.TimeoutExpired:
+            print(f"[{i+1}/{len(cells)}] {arch} {shape} {m}: TIMEOUT")
+            failures.append((arch, shape, m, "timeout"))
+    print(f"done; {len(failures)} failures")
+    for f in failures:
+        print("FAIL:", f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's HloCostAnalysis (what ``compiled.cost_analysis()`` wraps) visits a
+while-loop body ONCE, so scan-over-layers models under-report flops/bytes/
+collectives by a factor of n_layers.  This module parses the optimized HLO
+text and recursively attributes costs, multiplying while bodies by their
+(statically recoverable) trip counts — which lax.scan always produces as
+``compare(iv, constant(L)), direction=LT``.
+
+Conventions (per-device, since SPMD HLO has local shapes):
+  flops   — 2*M*N*K for dots (descending into fusions); elementwise ~1/elem
+  bytes   — operand + result sizes at fusion boundaries (HBM traffic proxy)
+  collectives — per-kind {count, bytes} with all-reduce wire cost 2x
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\(.*?\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_ZERO_COST_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "bitcast-convert", "reshape", "copy", "broadcast",
+                  "iota", "after-all", "custom-call", "partition-id",
+                  "replica-id", "copy-start", "copy-done", "slice",
+                  "dynamic-slice", "dynamic-update-slice", "pad", "concatenate",
+                  "transpose", "reverse", "gather", "scatter", "select",
+                  "compare", "convert", "reduce", "rng-bit-generator"}
+# ops above still count BYTES; flops only for the arithmetically heavy set
+_ELEMENTWISE_FLOP_OPS = {"add", "subtract", "multiply", "divide", "power",
+                         "exponential", "log", "rsqrt", "sqrt", "tanh",
+                         "negate", "maximum", "minimum", "abs", "and", "or",
+                         "xor", "not", "remainder", "sign", "floor", "ceil",
+                         "round-nearest-even", "exponential-minus-one",
+                         "log-plus-one", "logistic", "atan2", "select",
+                         "clamp", "compare", "reduce", "map", "cosine", "sine"}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "type", "op", "rest")
+
+    def __init__(self, name, type_, op, rest):
+        self.name = name
+        self.type = type_
+        self.op = op
+        self.rest = rest
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip().startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _called_comps(rest: str) -> List[str]:
+    out = []
+    for key in ("calls=", "to_apply=", "body=", "condition=", "branch_computations={"):
+        for m in re.finditer(re.escape(key) + r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?",
+                             rest):
+            for nm in m.group(1).split(","):
+                out.append(nm.strip().lstrip("%"))
+    return out
+
+
+def _dot_flops(instr: Instr, types: Dict[str, str]) -> float:
+    """2 * prod(result) * K, K = contracted size from lhs shape/dims."""
+    ops = re.findall(r"%([\w.\-]+)", instr.rest.split(")")[0])
+    result_elems = _type_elems(instr.type)
+    lhs_type = types.get(ops[0]) if ops else None
+    if lhs_type is None:
+        return 2.0 * result_elems
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    lhs_dims_m = _SHAPE_RE.search(lhs_type)
+    if not m or not lhs_dims_m:
+        return 2.0 * result_elems
+    dims = [int(d) for d in lhs_dims_m.group(2).split(",") if d]
+    contract = 1
+    for ci in m.group(1).split(","):
+        if ci:
+            contract *= dims[int(ci)]
+    return 2.0 * result_elems * contract
+
+
+def _while_trip_count(cond_comp: List[Instr]) -> int:
+    """lax.scan conditions are compare(iv, constant(L)), direction=LT."""
+    consts = {}
+    for ins in cond_comp:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond_comp:
+        if ins.op == "compare" and "direction=LT" in ins.rest:
+            ops = re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0])
+            for o in ops:
+                if o in consts and consts[o] > 0:
+                    return consts[o]
+    vals = [v for v in consts.values() if v > 0]
+    return max(vals) if vals else 1
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self.types: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.type for i in instrs} for c, instrs in self.comps.items()
+        }
+        self._memo: Dict[Tuple[str, bool], dict] = {}
+
+    def _zero(self):
+        return {"flops": 0.0, "bytes": 0.0,
+                "coll": {k: {"count": 0.0, "bytes": 0.0} for k in _COLL_KINDS}}
+
+    def comp_cost(self, name: str, inside_fusion: bool = False) -> dict:
+        key = (name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        acc = self._zero()
+        types = self.types.get(name, {})
+        for ins in self.comps.get(name, []):
+            op = ins.op
+            # ---- collectives ----
+            base = op.replace("-start", "")
+            if base in _COLL_KINDS and not op.endswith("-done"):
+                b = _type_bytes(ins.type)
+                if op.endswith("-start"):
+                    # result tuple carries (operand, result) aliases; halve
+                    b = b / 2
+                acc["coll"][base]["count"] += 1
+                acc["coll"][base]["bytes"] += b
+                acc["bytes"] += _type_bytes(ins.type)
+                continue
+            # ---- control flow ----
+            if op == "while":
+                m = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                body = m.group(1) if m else None
+                m = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                cond = m.group(1) if m else None
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    trips = _while_trip_count(self.comps.get(cond, [])) if cond else 1
+                sub = self.comp_cost(body) if body else self._zero()
+                acc["flops"] += sub["flops"] * trips
+                acc["bytes"] += sub["bytes"] * trips
+                for k in _COLL_KINDS:
+                    acc["coll"][k]["count"] += sub["coll"][k]["count"] * trips
+                    acc["coll"][k]["bytes"] += sub["coll"][k]["bytes"] * trips
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if m:
+                    sub = self.comp_cost(m.group(1), inside_fusion=True)
+                    acc["flops"] += sub["flops"]
+                    for k in _COLL_KINDS:
+                        acc["coll"][k]["count"] += sub["coll"][k]["count"]
+                        acc["coll"][k]["bytes"] += sub["coll"][k]["bytes"]
+                # bytes at fusion boundary: operands + result
+                acc["bytes"] += _type_bytes(ins.type)
+                for o in re.findall(r"%([\w.\-]+)", ins.rest.split("),")[0]):
+                    acc["bytes"] += _type_bytes(types.get(o, ""))
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for cn in _called_comps(ins.rest):
+                    if "cond" in cn and op == "while":
+                        continue
+                    sub = self.comp_cost(cn)
+                    acc["flops"] += sub["flops"]
+                    acc["bytes"] += sub["bytes"]
+                    for k in _COLL_KINDS:
+                        acc["coll"][k]["count"] += sub["coll"][k]["count"]
+                        acc["coll"][k]["bytes"] += sub["coll"][k]["bytes"]
+                continue
+            # ---- arithmetic ----
+            if op in ("dot", "dot-general"):
+                acc["flops"] += _dot_flops(ins, types)
+                if not inside_fusion:
+                    acc["bytes"] += _type_bytes(ins.type)
+                    for o in re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0]):
+                        acc["bytes"] += _type_bytes(types.get(o, ""))
+                continue
+            if op in _ELEMENTWISE_FLOP_OPS:
+                acc["flops"] += _type_elems(ins.type)
+            if op == "dynamic-update-slice":
+                # aliased in place on TPU: traffic = update read + write
+                ops_ = re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0])
+                upd = types.get(ops_[1], "") if len(ops_) > 1 else ""
+                acc["bytes"] += 2 * _type_bytes(upd)
+                continue
+            if not inside_fusion and op not in ("parameter", "constant",
+                                                "get-tuple-element", "tuple",
+                                                "convert", "bitcast"):
+                # NB: `convert` is zero-byte: XLA-CPU materializes dtype casts
+                # at fusion boundaries that XLA-TPU fuses into consumers (we
+                # observed bf16->f32->bf16 round trips around scan ys-buffer
+                # updates that would never touch HBM on the target).
+                acc["bytes"] += _type_bytes(ins.type)
+        self._memo[key] = acc
+        return acc
+
+    def entry_cost(self) -> dict:
+        entry = None
+        for name in self.comps:
+            if "main" in name or entry is None:
+                if "main" in name:
+                    entry = name
+        if entry is None:
+            entry = next(iter(self.comps))
+        cost = dict(self.comp_cost(entry))
+        coll = cost["coll"]
+        total = sum(v["bytes"] for v in coll.values())
+        cost["coll_total_bytes"] = total
+        cost["coll_wire_bytes"] = total + coll["all-reduce"]["bytes"]
+        return cost
+
+
+def analyze(text: str) -> dict:
+    return HloCost(text).entry_cost()

@@ -1,0 +1,205 @@
+"""Per-(arch x shape) cell construction: step function + abstract inputs.
+
+``build_cell`` returns everything the dry-run (and a real launcher) needs:
+the jittable step function, ShapeDtypeStruct stand-ins for every input
+(weak-type-correct, sharded, zero allocation), and pinned output shardings
+for the big state pytrees so GSPMD can't silently reshard caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, get_module, ssm_lm, transformer
+from repro.models.params import Def, specs_from_defs
+from repro.models.sharding import Distribution, default_rules
+from repro.train.optimizer import adamw, apply_updates
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees
+    out_shardings: Any  # or None
+    meta: dict
+
+
+def shape_rules(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    rules = default_rules(mesh)
+    if mesh is None:
+        return rules
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    if shape.kind == "decode" and shape.seq_len > 100_000:
+        # long-context: batch can't shard; spread the KV/state over everything
+        rules["kv_seq"] = dp + ((tp,) if tp else ())
+    return rules
+
+
+def _token_specs(cfg, shape, dist: Distribution, with_labels=True):
+    B, S = shape.global_batch, shape.seq_len
+    mesh = dist.mesh
+    sh = lambda *ax: (NamedSharding(mesh, dist.spec(*ax)) if mesh else None)
+
+    def sds(shp, dt, *ax):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, dt)
+        return jax.ShapeDtypeStruct(shp, dt, sharding=sh(*ax))
+
+    if cfg.family in ("audio", "encdec"):
+        St = max(S // cfg.target_ratio, 16)
+        out = {"frames": sds((B, S, cfg.d_model), jnp.bfloat16, "batch", "seq", None)}
+        out["tokens"] = sds((B, St), jnp.int32, "batch", None)
+        if with_labels:
+            out["labels"] = sds((B, St), jnp.int32, "batch", None)
+        return out
+    out = {"tokens": sds((B, S), jnp.int32, "batch", None)}
+    if with_labels:
+        out["labels"] = sds((B, S), jnp.int32, "batch", None)
+    return out
+
+
+def _serve_cache_specs(cfg: ModelConfig, shape: ShapeConfig, dist: Distribution):
+    """Abstract decode cache/state for this cell (bf16 KV, f32 SSM state)."""
+    B, S = shape.global_batch, shape.seq_len
+    mesh, rules = dist.mesh, dist.rules
+    if cfg.family in ("audio", "encdec"):
+        St = max(S // cfg.target_ratio, 16)
+        defs = encdec.cache_defs(cfg, B, S, St)
+        return specs_from_defs(defs, rules, mesh, jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        defs = ssm_lm.state_defs(cfg, B, S)
+        defs = {k: (dataclasses.replace(d, dtype=jnp.float32) if k == "h" else d)
+                for k, d in defs.items()}
+        return specs_from_defs(defs, rules, mesh, jnp.bfloat16)
+    return specs_from_defs(transformer.cache_defs(cfg, B, S), rules, mesh, jnp.bfloat16)
+
+
+def _shardings_of(tree):
+    return jax.tree.map(lambda s: getattr(s, "sharding", None), tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of this cell's step
+    function (weak-type-correct, sharded, no device allocation)."""
+    return build_cell(cfg, shape, mesh).args
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               lr: float = 3e-4) -> Cell:
+    rules = shape_rules(cfg, shape, mesh)
+    dist = Distribution(mesh=mesh, rules=rules)
+    mod = get_module(cfg)
+    param_specs = specs_from_defs(mod.defs(cfg), rules, mesh, jnp.float32)
+    if cfg.zero3 and mesh is not None and shape.kind == "train":
+        # FSDP: additionally shard every param's dim0 over the data axis;
+        # GSPMD all-gathers per layer and reduce-scatters the grads.
+        def _fsdp(s):
+            sh = getattr(s, "sharding", None)
+            if sh is None:
+                return s
+            spec = list(sh.spec) + [None] * (len(s.shape) - len(sh.spec))
+            used = {a for e in spec if e
+                    for a in ((e,) if isinstance(e, str) else e)}
+            dsize = mesh.shape.get("data", 1)
+            if (spec and spec[0] is None and "data" not in used
+                    and s.shape and s.shape[0] % dsize == 0):
+                spec[0] = "data"
+                sh = NamedSharding(mesh, P(*spec))
+            return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+        param_specs = jax.tree.map(_fsdp, param_specs)
+    name = f"{cfg.name}__{shape.name}"
+
+    if shape.kind == "train":
+        opt = adamw(lr)
+
+        def train_step(state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(cfg, p, batch, dist=dist), has_aux=True
+            )(state["params"])
+            updates, opt_state = opt.update(grads, state["opt"], state["params"])
+            params = apply_updates(state["params"], updates)
+            new_state = {"params": params, "opt": opt_state,
+                         "step": state["step"] + 1}
+            return new_state, {"loss": loss, **metrics}
+
+        def _moment(s):
+            sh = getattr(s, "sharding", None)
+            if cfg.zero1 and sh is not None and mesh is not None:
+                # ZeRO-1: additionally shard moments over the data axis
+                spec = list(sh.spec) + [None] * (len(s.shape) - len(sh.spec))
+                used = {a for e in spec if e
+                        for a in ((e,) if isinstance(e, str) else e)}
+                dsize = mesh.shape.get("data", 1)
+                if (spec and spec[0] is None and "data" not in used
+                        and s.shape and s.shape[0] % dsize == 0):
+                    spec[0] = "data"
+                    sh = NamedSharding(mesh, P(*spec))
+            return jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=sh)
+
+        mom = jax.tree.map(_moment, param_specs)
+        state_specs = {
+            "params": param_specs,
+            "opt": {"m": mom, "v": mom,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        batch_specs = _token_specs(cfg, shape, dist)
+        out_sh = (_shardings_of(state_specs), None) if mesh is not None else None
+        return Cell(name, train_step, (state_specs, batch_specs), out_sh,
+                    {"kind": "train"})
+
+    if shape.kind == "prefill":
+        batch_specs = _token_specs(cfg, shape, dist, with_labels=False)
+
+        if cfg.family in ("audio", "encdec"):
+            St = max(shape.seq_len // cfg.target_ratio, 16)
+
+            def prefill_fn(params, batch):
+                enc_out = encdec.encode(cfg, params, batch["frames"], dist=dist,
+                                        mode="prefill")
+                cache = encdec.make_cache(cfg, params, enc_out, St, dist=dist)
+                logits = encdec.decode_train(cfg, params, enc_out,
+                                             batch["tokens"], dist=dist,
+                                             mode="prefill")
+                return logits[:, -1:], cache
+
+            args = (param_specs, batch_specs)
+        else:
+            def prefill_fn(params, batch):
+                return mod.prefill(cfg, params, batch["tokens"], dist=dist)
+
+            args = (param_specs, batch_specs)
+        return Cell(name, prefill_fn, args, None, {"kind": "prefill"})
+
+    # ---- decode ----
+    cache_specs = _serve_cache_specs(cfg, shape, dist)
+    B = shape.global_batch
+    mesh_ = mesh
+    tok = (jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                sharding=NamedSharding(
+                                    mesh_, dist.spec("batch", None, shape=(B, 1))))
+           if mesh_ is not None else jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tokens, pos):
+        return mod.decode_step(cfg, params, cache, tokens, pos, dist=dist)
+
+    if mesh is not None:
+        logits_sh = NamedSharding(
+            mesh, dist.spec("batch", None, "vocab",
+                            shape=(B, 1, cfg.padded_vocab)))
+        out_sh = (logits_sh, _shardings_of(cache_specs))
+    else:
+        out_sh = None
+    return Cell(name, serve_step, (param_specs, cache_specs, tok, pos), out_sh,
+                {"kind": "decode"})

@@ -1,0 +1,143 @@
+"""Training driver.
+
+LM (assigned architectures, synthetic next-token data):
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+        --steps 20 --batch 4 --seq 128 --ckpt /tmp/ck
+
+Legion GNN (the paper's workload):
+    PYTHONPATH=src python -m repro.launch.train --gnn sage --dataset PR \
+        --steps 100 --mem-per-device 64e6 --topology nv4
+
+Full-scale LM configs are exercised via launch.dryrun (this container is a
+single CPU host); --smoke selects the reduced config for real execution.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def train_lm(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import get_module
+    from repro.models.params import init_from_defs
+    from repro.models.sharding import Distribution
+    from repro.train.checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                                        restore_checkpoint)
+    from repro.train.optimizer import adamw, apply_updates
+    from repro.train.pipeline import StragglerMonitor
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mod = get_module(cfg)
+    dist = Distribution.single_device()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_from_defs(mod.defs(cfg), key)
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    step0 = 0
+    ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
+    if ckpt and args.resume:
+        path = latest_checkpoint(args.ckpt)
+        if path:
+            step0, (params, opt_state) = restore_checkpoint(path, (params, opt_state))
+            print(f"resumed from step {step0}")
+
+    B, S = args.batch, args.seq
+
+    def make_batch(step):
+        rng = np.random.default_rng(args.seed + step)
+        toks = rng.integers(0, cfg.vocab_size, size=(B, S + 1))
+        d = {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+        if cfg.family in ("audio", "encdec"):
+            d["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                      jnp.float32)
+            St = max(S // cfg.target_ratio, 16)
+            d["tokens"], d["labels"] = d["tokens"][:, :St], d["labels"][:, :St]
+        return d
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: mod.loss_fn(cfg, p, batch, dist=dist), has_aux=True)(params)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    mon = StragglerMonitor()
+    for step in range(step0, args.steps):
+        t0 = time.perf_counter()
+        params, opt_state, loss = train_step(params, opt_state, make_batch(step))
+        loss.block_until_ready()
+        mon.record(time.perf_counter() - t0)
+        if step % max(args.steps // 10, 1) == 0:
+            print(f"step {step:5d} loss {float(loss):.4f}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.close()
+    print("straggler summary:", mon.summary())
+
+
+def train_gnn_cli(args):
+    from repro.core.cliques import topology_matrix
+    from repro.core.planner import build_plan
+    from repro.graph.csr import synthetic_instance
+    from repro.models.gnn import GNNConfig
+    from repro.train.loop import train_gnn
+
+    g = synthetic_instance(args.dataset, max_vertices=args.max_vertices,
+                           seed=args.seed)
+    print(f"dataset {args.dataset}: |V|={g.n} |E|={g.nnz} D={g.feat_dim}")
+    plan = build_plan(g, topology_matrix(args.topology),
+                      mem_per_device=float(args.mem_per_device),
+                      planner=args.planner, seed=args.seed)
+    for ci, p in enumerate(plan.cost_plans):
+        print(f"clique {ci}: alpha={p['alpha']:.2f} predicted N_total={p['N_total']:.0f}")
+    cfg = GNNConfig(model=args.gnn, feat_dim=g.feat_dim, hidden=args.hidden,
+                    batch_size=args.batch, fanouts=(25, 10), lr=args.lr)
+    res = train_gnn(g, plan, cfg, steps=args.steps, seed=args.seed,
+                    checkpoint_dir=args.ckpt, resume=args.resume)
+    print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}  "
+          f"acc {res.accs[-1]:.3f}")
+    print(f"feature hit rate {res.counter.feature_hit_rate:.3f}  "
+          f"topology hit rate {res.counter.topo_hit_rate:.3f}  "
+          f"PCIe tx {res.counter.pcie_transactions}")
+    print("straggler summary:", res.straggler)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="LM architecture id")
+    ap.add_argument("--gnn", choices=["sage", "gcn"], help="GNN model")
+    ap.add_argument("--dataset", default="PR", help="paper dataset profile")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--topology", default="nv4")
+    ap.add_argument("--planner", default="alpha_sweep",
+                    choices=["alpha_sweep", "knapsack"])
+    ap.add_argument("--mem-per-device", default="64e6")
+    ap.add_argument("--max-vertices", type=int, default=100_000)
+    args = ap.parse_args()
+    if args.gnn:
+        train_gnn_cli(args)
+    elif args.arch:
+        train_lm(args)
+    else:
+        raise SystemExit("pass --arch <id> or --gnn sage|gcn")
+
+
+if __name__ == "__main__":
+    main()

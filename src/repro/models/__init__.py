@@ -1,0 +1,30 @@
+"""Model zoo dispatch: family -> module implementing the uniform API
+
+  defs(cfg) -> param Def tree
+  loss_fn(cfg, params, batch, dist=...) -> (loss, metrics)
+  forward(...)            full-sequence
+  prefill(...)            forward + decode-ready cache/state
+  decode_step(cfg, params, cache, tokens, pos, dist=...) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, ssm_lm, transformer
+
+_FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm_lm,
+    "hybrid": ssm_lm,
+    "encdec": encdec,
+    "audio": encdec,
+    "gnn": None,  # handled by repro.models.gnn
+}
+
+
+def get_module(cfg: ModelConfig):
+    m = _FAMILY_MODULE[cfg.family]
+    if m is None:
+        raise ValueError(f"family {cfg.family} has a dedicated API (see repro.models.gnn)")
+    return m

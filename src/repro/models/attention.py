@@ -1,0 +1,189 @@
+"""GQA attention block with mode-dependent compute layouts.
+
+Parameters are sharded on the *packed* head projection dim (always divisible
+by the tensor axis even when head counts aren't).  Attention math itself runs
+in one of three layouts, so arbitrary (Hq, Hkv) work on any mesh:
+
+* train:   q/k/v resharded to batch-over-all-axes ("batch_full") — every chip
+           owns whole heads of a few full sequences, flash runs locally.
+* prefill: q sharded over its sequence dim ("seq" -> model axis), KV
+           replicated per data shard (GSPMD all-gather per layer; the ring
+           variant is a hillclimb).
+* decode:  KV cache sharded along sequence; shard_map flash-decode with a
+           global LSE combine (never gathers the cache).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+def attn_defs(cfg: ModelConfig, stack: int = 0, d_model: int = 0) -> dict:
+    """Param defs; ``stack`` > 0 prepends a stacked-layers dim."""
+    D = d_model or cfg.d_model
+    Dh = cfg.resolved_head_dim
+    PQ, PKV = cfg.n_heads * Dh, cfg.n_kv_heads * Dh
+    L = (stack,) if stack else ()
+    La = ("layers",) if stack else ()
+    d = {
+        "wq": Def(L + (D, PQ), La + ("embed", "heads")),
+        "wk": Def(L + (D, PKV), La + ("embed", "kv_heads")),
+        "wv": Def(L + (D, PKV), La + ("embed", "kv_heads")),
+        "wo": Def(L + (PQ, D), La + ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = Def(L + (PQ,), La + ("heads",), init="zeros")
+        d["bk"] = Def(L + (PKV,), La + ("kv_heads",), init="zeros")
+        d["bv"] = Def(L + (PKV,), La + ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        d["q_norm"] = Def(L + (Dh,), La + (None,), init="zeros")
+        d["k_norm"] = Def(L + (Dh,), La + (None,), init="zeros")
+    return d
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array):
+    B, S, _ = x.shape
+    Dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, Dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, Dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, Dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _out(cfg, p, o, dist: Distribution, seq_axis):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    o = dist.constrain(o, "batch", seq_axis, "heads")
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(o.dtype))
+    return dist.constrain(out, "batch", seq_axis, "embed")
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    dist: Distribution,
+    mode: str,  # train | prefill
+    positions: Optional[jax.Array] = None,
+    window=0,
+    theta=None,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence self attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(S)
+    if theta is None:
+        theta = cfg.rope_theta
+    q = layers.rope(q, positions, theta)
+    k = layers.rope(k, positions, theta)
+    if mode == "train" and cfg.attn_layout == "batch_full":
+        # every chip owns whole heads of a few sequences (head-count agnostic)
+        q = dist.constrain(q, "batch_full", None, None, None)
+        k = dist.constrain(k, "batch_full", None, None, None)
+        v = dist.constrain(v, "batch_full", None, None, None)
+        seq_axis = "seq"
+    else:  # sp / prefill: q sharded along seq, KV gathered per data shard
+        q = dist.constrain(q, "batch", "seq", None, None)
+        k = dist.constrain(k, "batch", None, None, None)
+        v = dist.constrain(v, "batch", None, None, None)
+        seq_axis = "seq"
+    o = layers.flash_attention(q, k, v, causal=causal, window=window)
+    return _out(cfg, p, o, dist, seq_axis)
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    enc_kv: tuple,
+    *,
+    dist: Distribution,
+    mode: str,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no rope, non-causal)."""
+    B, S, _ = x.shape
+    Dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype)).reshape(
+        B, S, cfg.n_heads, Dh
+    )
+    k, v = enc_kv
+    if mode == "decode":
+        S_enc = k.shape[1]
+        k_pos = jnp.arange(S_enc)
+        q_pos = jnp.full((S,), S_enc, jnp.int32)  # always >= k_pos: full visibility
+        o = layers.dist_decode_attention(q, k, v, q_pos, k_pos, dist=dist)
+    else:
+        q = dist.constrain(q, "batch", "seq", None, None)
+        o = layers.flash_attention(q, k, v, causal=False)
+    return _out(cfg, p, o, dist, "seq" if mode != "decode" else None)
+
+
+def make_cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array, dist: Distribution):
+    B, S, _ = enc_out.shape
+    Dh = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(enc_out.dtype))
+    k = k.reshape(B, S, cfg.n_kv_heads, Dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, Dh)
+    k = dist.constrain(k, "batch", "kv_seq", None, None)
+    v = dist.constrain(v, "batch", "kv_seq", None, None)
+    return k, v
+
+
+def decode_self_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    dist: Distribution,
+    window=0,
+    theta=None,
+) -> tuple:
+    """One-token self attention against a seq-sharded KV cache.
+
+    cache: {"k": (B, Smax, Hkv, Dh), "v": same}; ``pos`` scalar int32 = number
+    of tokens already in the cache (the new token's position).
+    """
+    B, S, _ = x.shape  # S == 1
+    q, k_new, v_new = _project(cfg, p, x)
+    if theta is None:
+        theta = cfg.rope_theta
+    positions = pos + jnp.arange(S)
+    q = layers.rope(q, positions, theta)
+    k_new = layers.rope(k_new, positions, theta)
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    k = dist.constrain(k, "batch", "kv_seq", None, None)
+    v = dist.constrain(v, "batch", "kv_seq", None, None)
+
+    Smax = k.shape[1]
+    idx = jnp.arange(Smax)
+    k_pos = jnp.where(idx <= pos, idx, -1)  # only filled slots are valid
+    o = layers.dist_decode_attention(
+        q, k, v, positions, k_pos, dist=dist, window=window
+    )
+    out = _out(cfg, p, o, dist, None)
+    return out, {"k": k, "v": v}

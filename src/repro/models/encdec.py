@@ -1,0 +1,185 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-large-v2).
+
+The modality frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S, d_model).  Encoder = bidirectional
+attention stack; decoder = causal self-attention + cross-attention over the
+encoder output.  Decode keeps two caches: the self-attn KV (grows) and the
+cross-attn KV (computed once from the encoder output, read every step).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import rms_norm, swiglu_mlp
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+def defs(cfg: ModelConfig) -> dict:
+    Le, Ld = cfg.n_enc_layers, cfg.n_dec_layers
+    D, V = cfg.d_model, cfg.padded_vocab
+    enc_layer = {
+        "attn_norm": Def((Le, D), ("layers", "embed"), init="zeros"),
+        "mlp_norm": Def((Le, D), ("layers", "embed"), init="zeros"),
+        **attn.attn_defs(cfg, stack=Le),
+        "w_gate": Def((Le, D, cfg.d_ff), ("layers", "embed", "ff")),
+        "w_up": Def((Le, D, cfg.d_ff), ("layers", "embed", "ff")),
+        "w_down": Def((Le, cfg.d_ff, D), ("layers", "ff", "embed")),
+    }
+    dec_layer = {
+        "attn_norm": Def((Ld, D), ("layers", "embed"), init="zeros"),
+        "cross_norm": Def((Ld, D), ("layers", "embed"), init="zeros"),
+        "mlp_norm": Def((Ld, D), ("layers", "embed"), init="zeros"),
+        **attn.attn_defs(cfg, stack=Ld),
+        "cross": attn.attn_defs(cfg, stack=Ld),
+        "w_gate": Def((Ld, D, cfg.d_ff), ("layers", "embed", "ff")),
+        "w_up": Def((Ld, D, cfg.d_ff), ("layers", "embed", "ff")),
+        "w_down": Def((Ld, cfg.d_ff, D), ("layers", "ff", "embed")),
+    }
+    return {
+        "frontend_proj": Def((D, D), ("embed", None)),
+        "enc_layers": enc_layer,
+        "enc_norm": Def((D,), ("embed",), init="zeros"),
+        "dec_embed": Def((V, D), ("vocab", "embed"), scale=0.02),
+        "dec_layers": dec_layer,
+        "final_norm": Def((D,), ("embed",), init="zeros"),
+        "lm_head": Def((D, V), ("embed", "vocab")),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array, *,
+           dist: Distribution, mode: str = "train") -> jax.Array:
+    """frames: (B, S, D) precomputed embeddings -> encoder states (B, S, D)."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(jnp.bfloat16),
+                   params["frontend_proj"].astype(jnp.bfloat16))
+    x = dist.constrain(x, "batch", "seq", "embed")
+
+    def layer(x, p_l):
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        x = x + attn.self_attention(cfg, p_l, h, dist=dist, mode=mode, causal=False)
+        x = dist.constrain(x, "batch", "seq", "embed")
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        x = dist.constrain(x + swiglu_mlp(p_l, h, dist), "batch", "seq", "embed")
+        return x
+
+    body = jax.checkpoint(layer) if (cfg.remat and mode == "train") else layer
+    from repro.models.runtime_flags import scan_unroll
+
+    x, _ = jax.lax.scan(lambda x, p: (body(x, p), None), x, params["enc_layers"],
+                        unroll=scan_unroll(cfg.n_enc_layers))
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params: dict, enc_out: jax.Array,
+                 tokens: jax.Array, *, dist: Distribution, mode: str = "train"):
+    """Teacher-forced decoder; tokens (B, St) -> logits (B, St, V)."""
+    x = jnp.take(params["dec_embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = dist.constrain(x, "batch", "seq", "embed")
+
+    def layer(x, p_l):
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        x = x + attn.self_attention(cfg, p_l, h, dist=dist, mode=mode, causal=True)
+        h = rms_norm(x, p_l["cross_norm"], cfg.norm_eps)
+        enc_kv = attn.make_cross_kv(cfg, p_l["cross"], enc_out, dist)
+        x = x + attn.cross_attention(cfg, p_l["cross"], h, enc_kv, dist=dist, mode=mode)
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        x = dist.constrain(x + swiglu_mlp(p_l, h, dist), "batch", "seq", "embed")
+        return x
+
+    body = jax.checkpoint(layer) if (cfg.remat and mode == "train") else layer
+    from repro.models.runtime_flags import scan_unroll
+
+    x, _ = jax.lax.scan(lambda x, p: (body(x, p), None), x, params["dec_layers"],
+                        unroll=scan_unroll(cfg.n_dec_layers))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return dist.constrain(logits, "batch", None, "vocab")
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            dist: Distribution, mode: str = "train"):
+    enc_out = encode(cfg, params, batch["frames"], dist=dist, mode=mode)
+    logits = decode_train(cfg, params, enc_out, batch["tokens"], dist=dist, mode=mode)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, dist: Distribution):
+    logits, _ = forward(cfg, params, batch, dist=dist, mode="train")
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce, {"ce": ce}
+
+
+# ---------------------------------------------------------------- decode ----
+
+def cache_defs(cfg: ModelConfig, batch: int, enc_len: int, max_tgt: int) -> dict:
+    Ld, Hkv, Dh = cfg.n_dec_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "self_k": Def((Ld, batch, max_tgt, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "self_v": Def((Ld, batch, max_tgt, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "cross_k": Def((Ld, batch, enc_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "cross_v": Def((Ld, batch, enc_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+    }
+
+
+def make_cache(cfg: ModelConfig, params: dict, enc_out: jax.Array, max_tgt: int,
+               *, dist: Distribution, dtype=jnp.bfloat16):
+    """Precompute cross KV for every decoder layer; empty self cache."""
+    B = enc_out.shape[0]
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def per_layer(p_l):
+        k, v = attn.make_cross_kv(cfg, p_l["cross"], enc_out, dist)
+        return k.astype(dtype), v.astype(dtype)
+
+    from repro.models.runtime_flags import scan_unroll
+
+    _, (ks, vs) = jax.lax.scan(
+        lambda c, p_l: (c, per_layer(p_l)), None, params["dec_layers"],
+        unroll=scan_unroll(cfg.n_dec_layers))
+    Ld = cfg.n_dec_layers
+    return {
+        "self_k": jnp.zeros((Ld, B, max_tgt, Hkv, Dh), dtype),
+        "self_v": jnp.zeros((Ld, B, max_tgt, Hkv, Dh), dtype),
+        "cross_k": ks,
+        "cross_v": vs,
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, *, dist: Distribution):
+    """One decoder token against self + cross caches."""
+    x = jnp.take(params["dec_embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = dist.constrain(x, "batch", None, "embed")
+
+    def scan_fn(x, xs):
+        p_l, sk, sv, ck, cv = xs
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        a, kv = attn.decode_self_attention(cfg, p_l, h, {"k": sk, "v": sv}, pos, dist=dist)
+        x = x + a
+        h = rms_norm(x, p_l["cross_norm"], cfg.norm_eps)
+        x = x + attn.cross_attention(cfg, p_l["cross"], h, (ck, cv), dist=dist, mode="decode")
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        x = dist.constrain(x + swiglu_mlp(p_l, h, dist, seq_axis=None), "batch", None, "embed")
+        return x, (kv["k"], kv["v"])
+
+    from repro.models.runtime_flags import scan_unroll
+
+    x, (ks, vs) = jax.lax.scan(
+        scan_fn, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+        unroll=scan_unroll(cfg.n_dec_layers))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = dist.constrain(logits, "batch", None, "vocab")
+    return logits, {**cache, "self_k": ks, "self_v": vs}

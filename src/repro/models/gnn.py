@@ -1,0 +1,99 @@
+"""GraphSAGE and GCN over fixed-fanout sampled subgraphs (paper §2, §6.1).
+
+The sampled mini-batch is the padded tensor form of the paper's 2-hop
+25x10 GraphSAGE workflow (Figure 1):
+
+  feats[0] (B, D)          seed features
+  feats[1] (B, f1, D)      hop-1 neighbor features
+  feats[2] (B, f1, f2, D)  hop-2 neighbor features
+  mask[l]  same shape minus D  (False = padded / zero-degree slot)
+
+AGGREGATE = masked mean; UPDATE = W_self h + W_neigh a  (SAGE) or
+W (mean(h ∪ N(h)))  (GCN); hidden dim 256, 2 layers as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "graphsage"
+    model: str = "sage"  # sage | gcn
+    feat_dim: int = 128
+    hidden: int = 256
+    n_classes: int = 32
+    fanouts: tuple = (25, 10)
+    batch_size: int = 8000
+    lr: float = 1e-3
+
+
+def defs(cfg: GNNConfig) -> dict:
+    L = len(cfg.fanouts)
+    out = {}
+    d_in = cfg.feat_dim
+    for l in range(L):
+        d_out = cfg.hidden
+        if cfg.model == "sage":
+            out[f"layer{l}"] = {
+                "w_self": Def((d_in, d_out), ("embed", "ff")),
+                "w_neigh": Def((d_in, d_out), ("embed", "ff")),
+                "b": Def((d_out,), ("ff",), init="zeros"),
+            }
+        else:  # gcn
+            out[f"layer{l}"] = {
+                "w": Def((d_in, d_out), ("embed", "ff")),
+                "b": Def((d_out,), ("ff",), init="zeros"),
+            }
+        d_in = d_out
+    out["head"] = Def((d_in, cfg.n_classes), ("ff", None))
+    return out
+
+
+def masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean over the second-to-last axis with a validity mask."""
+    m = mask.astype(x.dtype)[..., None]
+    s = (x * m).sum(axis=-2)
+    c = jnp.maximum(m.sum(axis=-2), 1.0)
+    return s / c
+
+
+def _apply_layer(cfg: GNNConfig, p: dict, h_self: jax.Array, h_agg: jax.Array):
+    if cfg.model == "sage":
+        out = h_self @ p["w_self"] + h_agg @ p["w_neigh"] + p["b"]
+    else:
+        out = 0.5 * (h_self + h_agg) @ p["w"] + p["b"]
+    return jax.nn.relu(out)
+
+
+def forward(cfg: GNNConfig, params: dict, batch: dict,
+            dist: Distribution = None) -> jax.Array:
+    """batch: feats_0..feats_L, mask_1..mask_L -> logits (B, n_classes)."""
+    L = len(cfg.fanouts)
+    h = [batch[f"feats_{l}"] for l in range(L + 1)]
+    for l in range(L):
+        p = params[f"layer{l}"]
+        new_h = []
+        for lev in range(L - l):
+            agg = masked_mean(h[lev + 1], batch[f"mask_{lev + 1}"])
+            new_h.append(_apply_layer(cfg, p, h[lev], agg))
+        h = new_h
+    return h[0] @ params["head"]
+
+
+def loss_fn(cfg: GNNConfig, params: dict, batch: dict,
+            dist: Distribution = None):
+    logits = forward(cfg, params, batch, dist).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = (lse - ll).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"acc": acc}

@@ -1,0 +1,256 @@
+"""Shared neural-net layers for the model zoo.
+
+Everything is pure-functional jnp over explicit param dicts.  Attention comes
+in three flavors:
+
+* ``flash_attention``       chunked online-softmax (lax.scan over KV blocks);
+                            O(S * block) memory, compiles on any backend.  The
+                            Pallas kernel in ``repro.kernels.flash_attention``
+                            is the TPU drop-in validated against the same math.
+* ``decode_attention``      single-step attention over a full KV cache.
+* ``dist_decode_attention`` shard_map flash-decode: the KV cache stays sharded
+                            along its sequence axis; shards compute partial
+                            (max, sum, weighted-V) and combine with a global
+                            log-sum-exp — no KV all-gather.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import Distribution
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    log_theta = (
+        math.log(theta) if isinstance(theta, (int, float)) else jnp.log(theta)
+    )
+    freqs = jnp.exp(-log_theta * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attn_mask(q_pos, k_pos, *, causal: bool, window=0, k_valid=None):
+    """(…, Sq, Sk) boolean mask from absolute positions.
+
+    ``window`` may be a traced scalar (per-layer local/global selection inside
+    a scan); window <= 0 means unbounded.
+    """
+    m = jnp.ones(q_pos.shape + k_pos.shape, dtype=bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m &= qp >= kp
+    if isinstance(window, (int, float)):
+        if window > 0:
+            m &= qp - kp < window
+    else:
+        m &= jnp.where(window > 0, (qp - kp) < window, True)
+    if k_valid is not None:
+        m &= k_valid[..., None, :]
+    return m
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_offset=0,
+    block_kv: int = 1024,
+) -> jax.Array:
+    """Chunked online-softmax attention with GQA.
+
+    q: (B, Sq, Hq, Dh);  k, v: (B, Sk, Hkv, Dh);  Hq % Hkv == 0.
+    """
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = Dh ** -0.5
+
+    block = min(block_kv, Sk)
+    pad = (-Sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = (Sk + pad) // block
+
+    qg = (q.reshape(B, Sq, Hkv, G, Dh) * scale).astype(q.dtype)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos_all = kv_offset + jnp.arange(Sk + pad)
+    k_valid_all = jnp.arange(Sk + pad) < Sk
+
+    ks = k.reshape(B, n_blocks, block, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_blocks, block, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    kps = k_pos_all.reshape(n_blocks, block)
+    kvs = k_valid_all.reshape(n_blocks, block)
+
+    o0 = jnp.zeros((B, Hkv, G, Sq, Dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+
+    def body(carry, blk):
+        o, m, l = carry
+        kb, vb, kp, kvalid = blk
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kb, preferred_element_type=jnp.float32
+        )
+        mask = _attn_mask(q_pos, kp, causal=causal, window=window, k_valid=kvalid)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (o, m_new, l), None
+
+    from repro.models.runtime_flags import scan_unroll
+    (o, m, l), _ = jax.lax.scan(
+        body, (o0, m0, l0), (ks, vs, kps, kvs), unroll=scan_unroll(n_blocks)
+    )
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-/few-token attention over a (possibly stale-padded) KV cache.
+
+    q: (B, Sq, Hq, Dh); k, v: (B, Skv, Hkv, Dh); k_pos: (Skv,) absolute
+    positions, entries < 0 are invalid slots.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh) * (Dh ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    valid = k_pos >= 0
+    mask = _attn_mask(q_pos, k_pos, causal=True, window=window, k_valid=valid)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def dist_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    dist: Distribution,
+    window: int = 0,
+    kv_logical: str = "kv_seq",
+) -> jax.Array:
+    """Flash-decode with the KV cache sharded along sequence.
+
+    Each shard computes a partial (m_i, l_i, u_i) over its KV slice; partials
+    combine with a global LSE: o = sum_i e^{m_i-M} u_i / sum_i e^{m_i-M} l_i.
+    This avoids ever all-gathering the cache (the GSPMD default for a plain
+    softmax over a seq-sharded cache).
+    """
+    mesh = dist.mesh
+    seq_axes = dist.mesh_axes(kv_logical)
+    if mesh is None or seq_axes is None:
+        return decode_attention(q, k, v, q_pos, k_pos, window=window)
+    if isinstance(seq_axes, str):
+        seq_axes = (seq_axes,)
+    # Drop axes that don't divide the cache length.
+    Skv = k.shape[1]
+    keep = []
+    size = 1
+    for a in seq_axes:
+        n = mesh.shape[a]
+        if Skv % (size * n) == 0:
+            keep.append(a)
+            size *= n
+    seq_axes = tuple(keep)
+    if not seq_axes:
+        return decode_attention(q, k, v, q_pos, k_pos, window=window)
+
+    batch_spec = dist.spec("batch", shape=(q.shape[0],))[0]
+
+    def local(qi, ki, vi, kpi, qpi):
+        B, Sq, Hq, Dh = qi.shape
+        Hkv = ki.shape[2]
+        G = Hq // Hkv
+        qg = qi.reshape(B, Sq, Hkv, G, Dh) * (Dh ** -0.5)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ki, preferred_element_type=jnp.float32)
+        valid = kpi >= 0
+        mask = _attn_mask(qpi, kpi, causal=True, window=window, k_valid=valid)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = s.max(axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = p.sum(axis=-1)
+        u = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vi.dtype), vi,
+            preferred_element_type=jnp.float32,
+        )
+        M = jax.lax.pmax(m, seq_axes)
+        a = jnp.exp(m - M)
+        num = jax.lax.psum(u * a[..., None], seq_axes)
+        den = jax.lax.psum(l * a, seq_axes)
+        o = num / jnp.maximum(den[..., None], 1e-30)
+        return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dh).astype(qi.dtype)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec, None, None, None),
+            P(batch_spec, seq_axes, None, None),
+            P(batch_spec, seq_axes, None, None),
+            P(seq_axes),
+            P(),
+        ),
+        out_specs=P(batch_spec, None, None, None),
+        check_vma=False,
+    )
+    return fn(q, k, v, k_pos, q_pos)
+
+
+def swiglu_mlp(p: dict, x: jax.Array, dist: Distribution, seq_axis="seq") -> jax.Array:
+    """Gated MLP; hidden dim sharded on the tensor axis."""
+    h = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    h = dist.constrain(h, "batch", seq_axis, "ff")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))

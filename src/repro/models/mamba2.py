@@ -1,0 +1,264 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Train/prefill use the chunked SSD algorithm (arXiv:2405.21060): within-chunk
+"attention-like" matmuls (MXU-friendly) + an associative scan over chunk
+states (log-depth; collective-permutes across a sharded chunk dim are
+GSPMD-generated).  Decode is the O(1) recurrence h = exp(dt*A) h + dt*B⊗x.
+
+Mixer parallelism: SSD heads shard on the tensor axis (ssm_heads -> model),
+B/C group projections are replicated (analogous to GQA KV), so the entire
+mixer is collective-free; resharding happens only at the in/out projections.
+
+``ssd_sequential`` is the step-by-step oracle used by the tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+def mamba_defs(cfg: ModelConfig, stack: int = 0) -> dict:
+    D, din = cfg.d_model, cfg.d_inner
+    N, G, H, W = cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads, cfg.conv_width
+    L = (stack,) if stack else ()
+    La = ("layers",) if stack else ()
+    return {
+        "w_z": Def(L + (D, din), La + ("embed", "ssm_inner")),
+        "w_x": Def(L + (D, din), La + ("embed", "ssm_inner")),
+        "w_B": Def(L + (D, G * N), La + ("embed", None)),
+        "w_C": Def(L + (D, G * N), La + ("embed", None)),
+        "w_dt": Def(L + (D, H), La + ("embed", "ssm_heads")),
+        "conv_x_w": Def(L + (W, din), La + (None, "ssm_inner"), scale=0.5),
+        "conv_x_b": Def(L + (din,), La + ("ssm_inner",), init="zeros"),
+        "conv_B_w": Def(L + (W, G * N), La + (None, None), scale=0.5),
+        "conv_B_b": Def(L + (G * N,), La + (None,), init="zeros"),
+        "conv_C_w": Def(L + (W, G * N), La + (None, None), scale=0.5),
+        "conv_C_b": Def(L + (G * N,), La + (None,), init="zeros"),
+        "A_log": Def(L + (H,), La + ("ssm_heads",), init="ones"),
+        "D": Def(L + (H,), La + ("ssm_heads",), init="ones"),
+        "dt_bias": Def(L + (H,), La + ("ssm_heads",), init="zeros"),
+        "norm": Def(L + (din,), La + ("ssm_inner",), init="zeros"),
+        "w_out": Def(L + (din, D), La + ("ssm_inner", "embed")),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv; x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(W):
+        shift = W - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        out = out + xs.astype(jnp.float32) * w[k].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv_step(x_new, conv_state, w, b):
+    """One decode step; conv_state (B, W-1, C) holds the raw input tail."""
+    window = jnp.concatenate([conv_state, x_new], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32))[:, None]
+    return out.astype(x_new.dtype), window[:, 1:]
+
+
+def _project(cfg, p, x):
+    """x (B,S,D) -> z, xh (B,S,H,P), B_, C_ (B,S,G,N), dt (B,S,H)."""
+    B, S, _ = x.shape
+    H, P_, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xr = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    Br = jnp.einsum("bsd,de->bse", x, p["w_B"].astype(x.dtype))
+    Cr = jnp.einsum("bsd,de->bse", x, p["w_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xr, Br, Cr, dt
+
+
+def ssd_chunked(x, dt, A, B_, C_, D_, chunk: int, h0=None,
+                compute_dtype=jnp.float32):
+    """Chunked SSD.  x (B,S,H,P) values; dt (B,S,H) f32; A (H,) negative;
+    B_, C_ (B,S,G,N); returns (y (B,S,H,P), h_final (B,H,N,P)).
+
+    ``compute_dtype=bf16`` keeps the decay cumsums in f32 but stores the
+    O(Q^2) intra-chunk tensors (Lmat/M) and runs the big einsums in bf16 —
+    halves the mixer's HBM traffic (§Perf iteration; decays are <= 1 so the
+    dynamic range is bf16-safe)."""
+    Bb, S, H, P_ = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    HG = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    c, Q = Sp // chunk, chunk
+
+    xc = x.reshape(Bb, c, Q, H, P_)
+    dtc = dt.reshape(Bb, c, Q, H)
+    Bc = B_.reshape(Bb, c, Q, G, N)
+    Cc = C_.reshape(Bb, c, Q, G, N)
+
+    da = dtc * A  # (B,c,Q,H), negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive
+
+    # --- intra-chunk (quadratic within chunk) ---
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))  # (B,c,G,Q,K)
+    Ldec = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3)  # (B,c,H,Q,K) = cum_q - cum_k
+    qk_mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(qk_mask, jnp.exp(Ldec), 0.0).astype(compute_dtype)
+    M = (CB.astype(compute_dtype).repeat(HG, axis=2) * Lmat
+         * dtc.astype(compute_dtype).transpose(0, 1, 3, 2)[:, :, :, None, :])
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M,
+                         xc.astype(compute_dtype)).astype(jnp.float32)
+
+    # --- chunk summary states ---
+    Bh = Bc.astype(compute_dtype).repeat(HG, axis=3)  # (B,c,Q,H,N)
+    Ch = Cc.astype(compute_dtype).repeat(HG, axis=3)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,c,Q,H) decay to chunk end
+    Sc = jnp.einsum("bckhn,bckh,bckhp->bchnp",
+                    Bh, (dec_end * dtc).astype(compute_dtype),
+                    xc.astype(compute_dtype)).astype(jnp.float32)  # (B,c,H,N,P)
+
+    # --- inter-chunk recurrence: h_c = a_c * h_{c-1} + S_c (associative) ---
+    a_c = jnp.exp(cum[:, :, -1, :])  # (B,c,H)
+
+    def op(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a2 * a1, a2[..., None, None] * s1 + s2
+
+    if h0 is not None:
+        a_c = jnp.concatenate([jnp.ones_like(a_c[:, :1]), a_c], axis=1)
+        Sc = jnp.concatenate([h0[:, None].astype(jnp.float32), Sc], axis=1)
+    _, hh = jax.lax.associative_scan(op, (a_c, Sc), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    h_final = hh[:, -1]
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(hh[:, :1]) if h0 is None else h0[:, None].astype(jnp.float32),
+         hh[:, :-1]], axis=1)  # state entering each chunk
+
+    # --- inter-chunk contribution ---
+    dec_in = jnp.exp(cum)  # decay from chunk start to q (inclusive of dt_q)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch,
+                         h_prev.astype(compute_dtype),
+                         dec_in.astype(compute_dtype)).astype(jnp.float32)
+
+    y = y_intra + y_inter + D_.astype(jnp.float32) [:, None] * xc.astype(jnp.float32)
+    y = y.reshape(Bb, Sp, H, P_)[:, :S]
+    return y, h_final
+
+
+def ssd_sequential(x, dt, A, B_, C_, D_, h0=None):
+    """Step-by-step oracle: h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t."""
+    Bb, S, H, P_ = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    HG = H // G
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P_), jnp.float32)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        da = jnp.exp(dtt * A)  # (B,H)
+        Bh = Bt.repeat(HG, axis=1)  # (B,H,N) broadcast groups->heads
+        Ch = Ct.repeat(HG, axis=1)
+        h = da[..., None, None] * h + (dtt[..., None, None]
+                                       * Bh[..., None] * xt[..., None, :].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2, 3).astype(jnp.float32),
+          C_.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + D_.astype(jnp.float32)[:, None] * x.astype(jnp.float32)
+    return y, h
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array, *, dist: Distribution,
+                mode: str = "train", h0=None):
+    """Full mixer for a (B,S,D) input. Returns (out, h_final)."""
+    B, S, D = x.shape
+    H, P_, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    z, xr, Br, Cr, dt = _project(cfg, p, x)
+    seq_sp = cfg.mamba_layout == "seq_sp"
+    if seq_sp:
+        # keep the mixer sequence-sharded: chunk boundaries align with the
+        # shards (4096/16 = 256 = one SSD chunk per device), the conv halo
+        # and the inter-chunk scan become collective-permutes; no
+        # activation reshard at the mixer boundary.
+        xr = dist.constrain(xr, "batch", "seq", None)
+    else:
+        xr = dist.constrain(xr, "batch", None, "ssm_inner")
+    xr = causal_conv(xr, p["conv_x_w"], p["conv_x_b"])
+    Br = causal_conv(Br, p["conv_B_w"], p["conv_B_b"])
+    Cr = causal_conv(Cr, p["conv_C_w"], p["conv_C_b"])
+    xh = xr.reshape(B, S, H, P_)
+    if seq_sp:
+        xh = dist.constrain(xh, "batch", "seq", None, None)
+    else:
+        xh = dist.constrain(xh, "batch", None, "ssm_heads", None)
+    Bm = Br.reshape(B, S, G, N)
+    Cm = Cr.reshape(B, S, G, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(
+        xh, dt, A, Bm, Cm, p["D"], cfg.ssd_chunk, h0=h0,
+        compute_dtype=jnp.bfloat16 if cfg.ssd_bf16 else jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    if cfg.mamba_layout == "seq_sp":
+        y = dist.constrain(y, "batch", "seq", None)
+    else:
+        y = dist.constrain(y, "batch", None, "ssm_inner")
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return dist.constrain(out, "batch", "seq", "embed"), h_final
+
+
+def mamba_decode_step(cfg: ModelConfig, p: dict, x: jax.Array, state: dict, *,
+                      dist: Distribution):
+    """One-token step.  state: {"h": (B,H,N,P), "conv_x"/"conv_B"/"conv_C"}."""
+    B, S, D = x.shape  # S == 1
+    H, P_, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    HG = H // G
+    z, xr, Br, Cr, dt = _project(cfg, p, x)
+    xr, cs_x = causal_conv_step(xr, state["conv_x"], p["conv_x_w"], p["conv_x_b"])
+    Br, cs_B = causal_conv_step(Br, state["conv_B"], p["conv_B_w"], p["conv_B_b"])
+    Cr, cs_C = causal_conv_step(Cr, state["conv_C"], p["conv_C_w"], p["conv_C_b"])
+    xh = xr.reshape(B, H, P_).astype(jnp.float32)
+    Bm = Br.reshape(B, G, N).repeat(HG, axis=1).astype(jnp.float32)
+    Cm = Cr.reshape(B, G, N).repeat(HG, axis=1).astype(jnp.float32)
+    dt1 = dt[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["h"]
+    da = jnp.exp(dt1 * A)
+    h = da[..., None, None] * h + dt1[..., None, None] * Bm[..., None] * xh[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, h) + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    new_state = {"h": h, "conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C}
+    return dist.constrain(out, "batch", None, "embed"), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    H, P_, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    W = cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, H, N, P_), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, cfg.ssm_ngroups * N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, cfg.ssm_ngroups * N), dtype),
+    }

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Train/prefill path (``mode != "decode"``): tokens are sharded over
+(data-parallel axes) x (tensor axis = expert-parallel axis).  Each device
+locally routes its token slice into per-expert capacity buffers, exchanges
+them with an ``all_to_all`` over the expert axis, runs its local experts, and
+all_to_all's back — the DeepSpeed/GShard schedule, expressed with shard_map
+so the collective shows up explicitly in the dry-run HLO.
+
+Decode path: with one token per sequence the dispatch buffers degenerate, so
+we use the dense-dispatch form (every expert computes the tiny token batch,
+combine by routing weight).  This reads all expert weights — which is the
+true memory behavior of decode-time MoE — and needs no shard_map.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+def moe_defs(cfg: ModelConfig, stack: int = 0) -> dict:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    L = (stack,) if stack else ()
+    La = ("layers",) if stack else ()
+    return {
+        "router": Def(L + (D, E), La + ("embed", None), scale=0.02),
+        "w_gate": Def(L + (E, D, F), La + ("experts", "embed", "ff")),
+        "w_up": Def(L + (E, D, F), La + ("experts", "embed", "ff")),
+        "w_down": Def(L + (E, F, D), La + ("experts", "ff", "embed"), fan_in_dims=(-2,)),
+    }
+
+
+def _route(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Router: top-k expert ids + normalized weights + switch aux loss."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype)).astype(
+        jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.top_k)  # (B,S,K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing loss: E * sum_e f_e * p_e
+    E = cfg.n_experts
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    onehot = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)  # top-1 fraction
+    fe = onehot.mean(axis=(0, 1))
+    aux = E * jnp.sum(fe * me)
+    return idx, weights, aux
+
+
+def _local_dispatch_compute_combine(x, idx, weights, wg, wu, wd, *, n_experts, top_k,
+                                    capacity, expert_axis):
+    """Per-shard MoE body (runs inside shard_map; expert_axis may be None for
+    the single-device path)."""
+    B, S, D = x.shape
+    T = B * S
+    K = top_k
+    E = n_experts
+    xt = x.reshape(T, D)
+    idx = idx.reshape(T, K)
+    wts = weights.reshape(T, K)
+
+    # position of each (token, k) within its expert queue, token-major priority
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (T,K,E)
+    flat = onehot.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) - flat  # exclusive ranks
+    pos = (pos * flat).sum(-1).reshape(T, K)  # (T,K) rank within chosen expert
+    keep = pos < capacity
+    slot = idx * capacity + pos  # (T,K) in [0, E*C)
+    slot = jnp.where(keep, slot, E * capacity)  # overflow bucket (dropped)
+
+    buf = jnp.zeros((E * capacity + 1, D), x.dtype)
+    contrib = jnp.broadcast_to(xt[:, None, :], (T, K, D)).reshape(T * K, D)
+    buf = buf.at[slot.reshape(-1)].add(contrib * keep.reshape(-1, 1))
+    buf = buf[:-1].reshape(E, capacity, D)
+
+    if expert_axis is not None:
+        # (E, C, D) -> (E_loc, C * n_shards, D): send chunk e to its owner
+        buf = jax.lax.all_to_all(buf, expert_axis, split_axis=0, concat_axis=1,
+                                 tiled=True)
+    h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(buf.dtype))
+    if expert_axis is not None:
+        y = jax.lax.all_to_all(y, expert_axis, split_axis=1, concat_axis=0,
+                               tiled=True)
+    y = jnp.concatenate([y.reshape(E * capacity, D),
+                         jnp.zeros((1, D), y.dtype)], axis=0)
+    out = (y[slot] * (wts * keep).astype(y.dtype)[..., None]).sum(axis=1)  # (T, D)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def moe_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    dist: Distribution,
+    mode: str = "train",
+    seq_axis: str = "seq",
+):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    idx, weights, aux = _route(cfg, p, x)
+    E = cfg.n_experts
+
+    if mode == "decode":
+        # dense dispatch: all experts compute the (tiny) token batch
+        h = jnp.einsum("bsd,edf->ebsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,edf->ebsf", x, p["w_up"].astype(x.dtype))
+        y = jnp.einsum("ebsf,efd->ebsd", jax.nn.silu(h) * u, p["w_down"].astype(x.dtype))
+        wdense = (jax.nn.one_hot(idx, E, dtype=jnp.float32) * weights[..., None]).sum(2)
+        out = jnp.einsum("ebsd,bse->bsd", y, wdense.astype(y.dtype))
+        return out.astype(x.dtype), aux
+
+    mesh = dist.mesh
+    expert_axis = dist.mesh_axes("experts")
+    B, S, D = x.shape
+    if mesh is None or expert_axis is None:
+        T = B * S
+        cap = int(cfg.capacity_factor * T * cfg.top_k / E) + 1
+        out = _local_dispatch_compute_combine(
+            x, idx, weights, p["w_gate"], p["w_up"], p["w_down"],
+            n_experts=E, top_k=cfg.top_k, capacity=cap, expert_axis=None,
+        )
+        return out, aux
+
+    batch_spec = dist.spec("batch", shape=(B,))[0]
+    seq_spec = dist.spec(seq_axis, shape=(S,))[0] if seq_axis else None
+    T_loc = (B // dist.nshards("batch", B)) * (
+        S // (dist.nshards(seq_axis, S) if seq_axis else 1)
+    )
+    cap = int(cfg.capacity_factor * T_loc * cfg.top_k / E) + 1
+    cap = -(-cap // 8) * 8  # round to 8 for tiling
+
+    def body(x_l, idx_l, w_l, wg_l, wu_l, wd_l):
+        return _local_dispatch_compute_combine(
+            x_l, idx_l, w_l, wg_l, wu_l, wd_l,
+            n_experts=E, top_k=cfg.top_k, capacity=cap, expert_axis=expert_axis,
+        )
+
+    # NB: expert weights enter sharded (E_loc, D, F) — E_loc = E / n_shards
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec, seq_spec, None),
+            P(batch_spec, seq_spec, None),
+            P(batch_spec, seq_spec, None),
+            P(expert_axis, None, None),
+            P(expert_axis, None, None),
+            P(expert_axis, None, None),
+        ),
+        out_specs=P(batch_spec, seq_spec, None),
+        check_vma=False,
+    )
+    out = fn(x, idx, weights, p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux

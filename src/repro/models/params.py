@@ -1,0 +1,136 @@
+"""Parameter-definition machinery.
+
+Models declare their parameters once as a pytree of :class:`Def` leaves
+(shape + logical axes + init rule).  Three views are derived from that single
+source of truth so init / dry-run specs / partition specs can never drift:
+
+* ``init_from_defs``    -> real arrays (smoke tests, real training)
+* ``specs_from_defs``   -> ShapeDtypeStruct with NamedSharding (dry-run)
+* ``pspecs_from_defs``  -> PartitionSpec tree (in_shardings)
+
+Logical->mesh translation happens through a rules dict, with divisibility
+checked against the mesh so non-divisible dims silently fall back to
+replication (GSPMD would otherwise pad).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Def:
+    """A single parameter definition."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim; len == len(shape)
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+    fan_in_dims: tuple = (-2,)  # dims whose product is fan-in for default scale
+    dtype: Optional[Any] = None  # overrides the tree-level default dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, Def)
+
+
+def _std(d: Def) -> float:
+    if d.scale is not None:
+        return d.scale
+    fan_in = 1
+    for dim in d.fan_in_dims:
+        fan_in *= d.shape[dim]
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def init_from_defs(defs: Any, key: jax.Array, param_dtype=jnp.float32) -> Any:
+    """Materialize real parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = d.dtype or param_dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * _std(d)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def resolve_spec(d: Def, rules: dict, mesh: Optional[Mesh]) -> P:
+    """Translate logical axes -> PartitionSpec, dropping non-divisible shards."""
+    parts = []
+    used = set()
+    for dim, ax in zip(d.shape, d.axes):
+        mesh_axes = rules.get(ax) if ax is not None else None
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        # filter: divisibility + each mesh axis used at most once per param
+        keep = []
+        size = 1
+        for m in mesh_axes:
+            if m in used or (mesh is not None and m not in mesh.shape):
+                continue
+            msize = mesh.shape[m] if mesh is not None else 1
+            if dim % (size * msize) == 0:
+                keep.append(m)
+                size *= msize
+        for m in keep:
+            used.add(m)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    return P(*parts)
+
+
+def pspecs_from_defs(defs: Any, rules: dict, mesh: Optional[Mesh]) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: resolve_spec(d, rules, mesh), defs, is_leaf=is_def
+    )
+
+
+def specs_from_defs(
+    defs: Any, rules: dict, mesh: Optional[Mesh], dtype=jnp.float32
+) -> Any:
+    """ShapeDtypeStruct view (for .lower() without allocation)."""
+
+    def f(d: Def):
+        dt = d.dtype or dtype
+        if mesh is None:
+            return jax.ShapeDtypeStruct(d.shape, dt)
+        sh = NamedSharding(mesh, resolve_spec(d, rules, mesh))
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sh)
+
+    return jax.tree_util.tree_map(f, defs, is_leaf=is_def)
+
+
+def spec_like(tree: Any, rules: dict, mesh: Optional[Mesh], axes_tree: Any) -> Any:
+    """ShapeDtypeStruct for an arbitrary activation pytree given logical axes."""
+
+    def f(x, axes):
+        d = Def(tuple(x.shape), tuple(axes))
+        if mesh is None:
+            return jax.ShapeDtypeStruct(x.shape, x.dtype)
+        return jax.ShapeDtypeStruct(
+            x.shape, x.dtype, sharding=NamedSharding(mesh, resolve_spec(d, rules, mesh))
+        )
+
+    return jax.tree_util.tree_map(f, tree, axes_tree)

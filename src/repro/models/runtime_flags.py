@@ -1,0 +1,29 @@
+"""Process-wide model tracing flags.
+
+``unroll_scans``: when True, layer scans and flash-attention KV scans trace
+with ``unroll=length``.  XLA's HloCostAnalysis counts a while-loop body once
+(not x trip-count), so the dry-run sets this to get exact flops/bytes/
+collective counts from the compiled HLO; training/tests keep rolled scans for
+fast compiles and small code.
+"""
+from __future__ import annotations
+
+import contextlib
+
+unroll_scans: bool = False
+
+
+def scan_unroll(length: int) -> int:
+    """Value for lax.scan(..., unroll=...) honoring the flag."""
+    return length if unroll_scans else 1
+
+
+@contextlib.contextmanager
+def unrolled(flag: bool = True):
+    global unroll_scans
+    old = unroll_scans
+    unroll_scans = flag
+    try:
+        yield
+    finally:
+        unroll_scans = old

@@ -1,0 +1,150 @@
+"""Distribution context: mesh + logical-axis sharding rules.
+
+Logical activation/parameter axes used across the model zoo:
+
+  batch       mini-batch dim                  -> ("pod", "data") (DP)
+  batch_full  batch reshard across whole mesh -> ("pod", "data", "model")
+              (used for train-time attention: every chip owns whole heads
+               of a few sequences, so arbitrary head counts work)
+  seq         sequence dim (Megatron-style SP)-> "model"
+  kv_seq      KV-cache sequence dim           -> "model" (decode) / "data"+"model" (500k)
+  embed       residual/d_model                -> replicated
+  heads       packed q-head projection dim    -> "model" (when divisible)
+  kv_heads    packed kv-head projection dim   -> "model" (when divisible)
+  ff          MLP hidden dim                  -> "model"
+  vocab       vocabulary dim                  -> "model"
+  experts     MoE expert dim                  -> "model"
+  ssm_inner   mamba inner channel dim         -> "model"
+  ssm_heads   mamba head dim                  -> "model"
+  layers      stacked-layer leading dim       -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import Def, resolve_spec
+
+
+def default_rules(mesh: Optional[Mesh]) -> dict:
+    """Logical axis -> mesh axes, adapted to whichever axes the mesh has."""
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    rules = {
+        "batch": dp if dp else None,
+        "batch_full": dp + ((tp,) if tp else ()),
+        "seq": tp,
+        "kv_seq": tp,
+        "kv_seq_wide": dp + ((tp,) if tp else ()),
+        "embed": None,
+        "heads": tp,
+        "kv_heads": tp,
+        "ff": tp,
+        "vocab": tp,
+        "experts": tp,
+        "ssm_inner": tp,
+        "ssm_heads": tp,
+        "ssm_state": None,
+        "layers": None,
+    }
+    return rules
+
+
+@dataclasses.dataclass
+class Distribution:
+    """Carries the mesh + rules through model code.
+
+    ``mesh=None`` (or a 1x1 mesh) gives single-device semantics: constraints
+    become no-ops and shard_map collectives act over size-1 axes.
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.mesh is not None and not self.rules:
+            self.rules = default_rules(self.mesh)
+
+    @staticmethod
+    def single_device() -> "Distribution":
+        return Distribution(mesh=None, rules={})
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    def mesh_axes(self, logical: str):
+        """Mesh axis name(s) for a logical axis (for shard_map collectives)."""
+        if self.mesh is None:
+            return None
+        ax = self.rules.get(logical)
+        return ax
+
+    def spec(self, *axes: Optional[str], shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for the given logical axes (divisibility-checked when
+        a shape is provided)."""
+        if self.mesh is None:
+            return P()
+        if shape is None:
+            parts = []
+            used = set()
+            for ax in axes:
+                m = self.rules.get(ax) if ax else None
+                if isinstance(m, str):
+                    m = (m,)
+                if m:
+                    m = tuple(x for x in m if x not in used and x in self.mesh.shape)
+                    used.update(m)
+                if not m:
+                    parts.append(None)
+                elif len(m) == 1:
+                    parts.append(m[0])
+                else:
+                    parts.append(tuple(m))
+            return P(*parts)
+        d = Def(tuple(shape), tuple(axes))
+        return resolve_spec(d, self.rules, self.mesh)
+
+    def nshards(self, logical: Optional[str], dim: int) -> int:
+        """How many ways a dim of this size actually shards (divisibility-aware)."""
+        if self.mesh is None or logical is None:
+            return 1
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            s = self.mesh.shape.get(a, 1)
+            if dim % (n * s) == 0:
+                n *= s
+        return n
+
+    def constrain(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """with_sharding_constraint by logical axes; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(*axes, shape=x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def named_sharding(self, *axes: Optional[str], shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes, shape=shape))

@@ -1,0 +1,301 @@
+"""SSM and hybrid-SSM language models (mamba2-780m, zamba2-1.2b).
+
+Pure SSM: embed -> scan over [norm + mamba mixer] -> norm -> lm_head.
+
+Hybrid (attn_every = k > 0, zamba2): after every k mamba layers, one *shared*
+transformer block (attention + MLP, one set of weights reused at every
+application — zamba2's parameter-sharing scheme) is applied.  Structured as an
+outer scan over groups so the shared block's weights are closure constants.
+
+Decode state: stacked SSM states (L, B, H, N, P) + conv tails; hybrid adds a
+per-application KV cache (G, B, Smax, Hkv, Dh) sharded along sequence.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import rms_norm, swiglu_mlp
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+
+def _n_groups(cfg: ModelConfig):
+    if cfg.attn_every <= 0:
+        return 0, cfg.n_layers
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.n_layers - g * cfg.attn_every
+
+
+def defs(cfg: ModelConfig) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    layer = {
+        "pre_norm": Def((L, D), ("layers", "embed"), init="zeros"),
+        **mamba2.mamba_defs(cfg, stack=L),
+    }
+    out = {
+        "embed": Def((V, D), ("vocab", "embed"), scale=0.02),
+        "layers": layer,
+        "final_norm": Def((D,), ("embed",), init="zeros"),
+        "lm_head": Def((D, V), ("embed", "vocab")),
+    }
+    G, _ = _n_groups(cfg)
+    if G > 0:
+        out["shared_attn"] = {
+            "attn_norm": Def((D,), ("embed",), init="zeros"),
+            "mlp_norm": Def((D,), ("embed",), init="zeros"),
+            **attn.attn_defs(cfg),
+            "w_gate": Def((D, cfg.d_ff), ("embed", "ff")),
+            "w_up": Def((D, cfg.d_ff), ("embed", "ff")),
+            "w_down": Def((cfg.d_ff, D), ("ff", "embed")),
+        }
+    return out
+
+
+def _group_params(cfg: ModelConfig, layers: dict):
+    """Split stacked layer params into (G, k, ...) groups + tail."""
+    G, tail = _n_groups(cfg)
+    k = cfg.attn_every
+    if G == 0:
+        return None, layers
+    grouped = jax.tree.map(lambda a: a[: G * k].reshape(G, k, *a.shape[1:]), layers)
+    tail_p = jax.tree.map(lambda a: a[G * k:], layers) if tail else None
+    return grouped, tail_p
+
+
+def _mamba_layer(cfg, p_l, x, dist, h0=None):
+    h = rms_norm(x, p_l["pre_norm"], cfg.norm_eps)
+    y, h_final = mamba2.mamba_block(cfg, p_l, h, dist=dist, h0=h0)
+    return x + y, h_final
+
+
+def _shared_block(cfg, p, x, dist, mode):
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + attn.self_attention(cfg, p, h, dist=dist, mode=mode)
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu_mlp(p, h, dist)
+    return dist.constrain(x, "batch", "seq", "embed")
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            dist: Distribution, mode: str = "train"):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = dist.constrain(x, "batch", "seq", "embed")
+    G, tail = _n_groups(cfg)
+
+    def mlayer(x, p_l):
+        x, _ = _mamba_layer(cfg, p_l, x, dist)
+        return x
+
+    mbody = jax.checkpoint(mlayer) if (cfg.remat and mode == "train") else mlayer
+
+    from repro.models.runtime_flags import scan_unroll
+
+    def mamba_scan(x, stacked):
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        x, _ = jax.lax.scan(lambda x, p_l: (mbody(x, p_l), None), x, stacked,
+                            unroll=scan_unroll(n))
+        return x
+
+    if G == 0:
+        x = mamba_scan(x, params["layers"])
+    else:
+        grouped, tail_p = _group_params(cfg, params["layers"])
+        sb = params["shared_attn"]
+
+        def sblock_fn(x, p):
+            return _shared_block(cfg, p, x, dist, mode)
+
+        sblock = (
+            jax.checkpoint(sblock_fn) if (cfg.remat and mode == "train") else sblock_fn
+        )
+
+        def group_fn(x, p_g):
+            x = mamba_scan(x, p_g)
+            x = sblock(x, sb)
+            return x, None
+
+        x, _ = jax.lax.scan(group_fn, x, grouped,
+                            unroll=scan_unroll(G))
+        if tail_p is not None:
+            x = mamba_scan(x, tail_p)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return dist.constrain(logits, "batch", None, "vocab"), jnp.float32(0.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, dist: Distribution):
+    logits, _ = forward(cfg, params, batch["tokens"], dist=dist, mode="train")
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = ((lse - ll) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce, {"ce": ce}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            dist: Distribution, max_len: Optional[int] = None):
+    """Forward in prefill layout, emitting decode-ready SSM states (and, for
+    hybrids, the shared-block KV caches).  Conv tails are re-initialized to
+    zero (a 3-token window; negligible vs. the state)."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    max_len = max_len or S
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = dist.constrain(x, "batch", "seq", "embed")
+    G, tail = _n_groups(cfg)
+
+    from repro.models.runtime_flags import scan_unroll
+
+    def mamba_scan(x, stacked):
+        def f(x, p_l):
+            h = rms_norm(x, p_l["pre_norm"], cfg.norm_eps)
+            y, h_final = mamba2.mamba_block(cfg, p_l, h, dist=dist, mode="prefill")
+            return x + y, h_final
+
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        return jax.lax.scan(f, x, stacked, unroll=scan_unroll(n))
+
+    hs = []
+    kvs = []
+    if G == 0:
+        x, h_all = mamba_scan(x, params["layers"])
+        hs.append(h_all)
+    else:
+        grouped, tail_p = _group_params(cfg, params["layers"])
+        sb = params["shared_attn"]
+        for g in range(G):
+            p_g = jax.tree.map(lambda a: a[g], grouped)
+            x, h_g = mamba_scan(x, p_g)
+            hs.append(h_g)
+            h = rms_norm(x, sb["attn_norm"], cfg.norm_eps)
+            q, k, v = attn._project(cfg, sb, h)
+            from repro.models.layers import flash_attention, rope
+
+            positions = jnp.arange(S)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            q = dist.constrain(q, "batch", "seq", None, None)
+            o = flash_attention(q, k, v, causal=True)
+            x = x + attn._out(cfg, sb, o, dist, "seq")
+            h = rms_norm(x, sb["mlp_norm"], cfg.norm_eps)
+            x = dist.constrain(x + swiglu_mlp(sb, h, dist), "batch", "seq", "embed")
+            if max_len > S:
+                k = jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+            kvs.append((dist.constrain(k, "batch", "kv_seq", None, None),
+                        dist.constrain(v, "batch", "kv_seq", None, None)))
+        if tail_p is not None:
+            x, h_t = mamba_scan(x, tail_p)
+            hs.append(h_t)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"].astype(x.dtype))
+    state = init_state(cfg, B, max_len)
+    state["h"] = jnp.concatenate(hs, axis=0)
+    if kvs:
+        state["attn_k"] = jnp.stack([k for k, _ in kvs])
+        state["attn_v"] = jnp.stack([v for _, v in kvs])
+    return dist.constrain(logits, "batch", None, "vocab"), state
+
+
+# ---------------------------------------------------------------- decode ----
+
+def state_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    L = cfg.n_layers
+    H, P_, N, W = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.conv_width
+    din, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    d = {
+        "h": Def((L, batch, H, N, P_), ("layers", "batch", "ssm_heads", None, None), init="zeros"),
+        "conv_x": Def((L, batch, W - 1, din), ("layers", "batch", None, "ssm_inner"), init="zeros"),
+        "conv_B": Def((L, batch, W - 1, gn), ("layers", "batch", None, None), init="zeros"),
+        "conv_C": Def((L, batch, W - 1, gn), ("layers", "batch", None, None), init="zeros"),
+    }
+    G, _ = _n_groups(cfg)
+    if G > 0:
+        Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        d["attn_k"] = Def((G, batch, max_len, Hkv, Dh),
+                          ("layers", "batch", "kv_seq", None, None), init="zeros")
+        d["attn_v"] = Def((G, batch, max_len, Hkv, Dh),
+                          ("layers", "batch", "kv_seq", None, None), init="zeros")
+    return d
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    from repro.models.params import init_from_defs
+
+    d = state_defs(cfg, batch, max_len)
+    tree = init_from_defs(d, jax.random.PRNGKey(0), jnp.float32)
+    # conv/k/v caches in bf16, ssm state in f32
+    return {k: (v if k == "h" else v.astype(dtype)) for k, v in tree.items()}
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict, tokens: jax.Array,
+                pos: jax.Array, *, dist: Distribution):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    x = dist.constrain(x, "batch", None, "embed")
+    G, tail = _n_groups(cfg)
+    k = cfg.attn_every
+
+    def mamba_decode_scan(x, stacked_p, stacked_s):
+        def f(x, xs):
+            p_l, h_l, cx, cb, cc = xs
+            st = {"h": h_l, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+            h = rms_norm(x, p_l["pre_norm"], cfg.norm_eps)
+            y, new = mamba2.mamba_decode_step(cfg, p_l, h, st, dist=dist)
+            return x + y, (new["h"], new["conv_x"], new["conv_B"], new["conv_C"])
+
+        from repro.models.runtime_flags import scan_unroll
+
+        n = jax.tree.leaves(stacked_p)[0].shape[0]
+        x, ys = jax.lax.scan(
+            f, x, (stacked_p, stacked_s["h"], stacked_s["conv_x"],
+                   stacked_s["conv_B"], stacked_s["conv_C"]),
+            unroll=scan_unroll(n))
+        return x, {"h": ys[0], "conv_x": ys[1], "conv_B": ys[2], "conv_C": ys[3]}
+
+    ssm_keys = ("h", "conv_x", "conv_B", "conv_C")
+    if G == 0:
+        x, new_ssm = mamba_decode_scan(x, params["layers"],
+                                       {s: state[s] for s in ssm_keys})
+        new_state = dict(state)
+        new_state.update(new_ssm)
+    else:
+        grouped, tail_p = _group_params(cfg, params["layers"])
+        sb = params["shared_attn"]
+        new_parts = {s: [] for s in ssm_keys}
+        new_k, new_v = [], []
+        for g in range(G):
+            p_g = jax.tree.map(lambda a: a[g], grouped)
+            s_g = {s: state[s][g * k:(g + 1) * k] for s in ssm_keys}
+            x, ns = mamba_decode_scan(x, p_g, s_g)
+            for s in ssm_keys:
+                new_parts[s].append(ns[s])
+            h = rms_norm(x, sb["attn_norm"], cfg.norm_eps)
+            a, kv = attn.decode_self_attention(
+                cfg, sb, h, {"k": state["attn_k"][g], "v": state["attn_v"][g]},
+                pos, dist=dist)
+            x = x + a
+            h = rms_norm(x, sb["mlp_norm"], cfg.norm_eps)
+            x = x + swiglu_mlp(sb, h, dist, seq_axis=None)
+            new_k.append(kv["k"])
+            new_v.append(kv["v"])
+        if tail_p is not None:
+            s_t = {s: state[s][G * k:] for s in ssm_keys}
+            x, ns = mamba_decode_scan(x, tail_p, s_t)
+            for s in ssm_keys:
+                new_parts[s].append(ns[s])
+        new_state = {s: jnp.concatenate(new_parts[s], axis=0) for s in ssm_keys}
+        new_state["attn_k"] = jnp.stack(new_k)
+        new_state["attn_v"] = jnp.stack(new_v)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return dist.constrain(logits, "batch", None, "vocab"), new_state

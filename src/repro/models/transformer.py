@@ -1,0 +1,306 @@
+"""Decoder-only LM covering the dense / MoE / sliding-window families.
+
+Layers are stacked along a leading dim and driven by lax.scan (keeps HLO and
+512-way GSPMD partitioning tractable); per-layer heterogeneity (gemma3's
+5 local : 1 global attention pattern, per-layer rope theta) rides along as
+scan inputs.  Decode scans over stacked KV caches (L, B, Smax, Hkv, Dh) that
+stay sharded along their sequence axis (see layers.dist_decode_attention).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import rms_norm, swiglu_mlp
+from repro.models.params import Def
+from repro.models.sharding import Distribution
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel for traced per-layer windows
+
+
+def defs(cfg: ModelConfig) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    layer: dict = {
+        "attn_norm": Def((L, D), ("layers", "embed"), init="zeros"),
+        "mlp_norm": Def((L, D), ("layers", "embed"), init="zeros"),
+        **attn.attn_defs(cfg, stack=L),
+    }
+    if cfg.n_experts > 0:
+        layer.update(moe_mod.moe_defs(cfg, stack=L))
+    else:
+        layer.update(
+            {
+                "w_gate": Def((L, D, cfg.d_ff), ("layers", "embed", "ff")),
+                "w_up": Def((L, D, cfg.d_ff), ("layers", "embed", "ff")),
+                "w_down": Def((L, cfg.d_ff, D), ("layers", "ff", "embed")),
+            }
+        )
+    out = {
+        "embed": Def((V, D), ("vocab", "embed"), scale=0.02),
+        "layers": layer,
+        "final_norm": Def((D,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Def((D, V), ("embed", "vocab"))
+    return out
+
+
+def layer_flags(cfg: ModelConfig):
+    """Per-layer (window, rope_theta) arrays for the scan."""
+    L = cfg.n_layers
+    if cfg.local_global_ratio > 0:
+        # pattern: N local then 1 global, repeating (gemma3: 5:1)
+        per = cfg.local_global_ratio + 1
+        is_global = (jnp.arange(L) % per) == cfg.local_global_ratio
+        window = jnp.where(is_global, BIG_WINDOW, cfg.sliding_window).astype(jnp.int32)
+        theta = jnp.where(
+            is_global, cfg.global_rope_theta or cfg.rope_theta, cfg.rope_theta
+        ).astype(jnp.float32)
+    else:
+        w = cfg.sliding_window if cfg.sliding_window > 0 else BIG_WINDOW
+        window = jnp.full((L,), w, jnp.int32)
+        theta = jnp.full((L,), cfg.rope_theta, jnp.float32)
+    return window, theta
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 dist: Distribution, dtype=jnp.bfloat16) -> jax.Array:
+    if cfg.input_is_embeddings:
+        return tokens.astype(dtype)
+    if (cfg.embed_gather == "shard_map" and dist.mesh is not None
+            and dist.nshards("vocab", cfg.padded_vocab) > 1):
+        x = _sharded_embed_lookup(cfg, params["embed"], tokens, dist, dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    return dist.constrain(x, "batch", "seq", "embed")
+
+
+def _sharded_embed_lookup(cfg, table, tokens, dist: Distribution, dtype):
+    """Vocab-sharded lookup: each shard gathers its local rows and psums.
+
+    The backward pass is a *local* scatter-add into the shard (grads stay
+    vocab-sharded) — avoiding GSPMD's full-table gradient all-reduce, the
+    dominant collective for big-vocab archs (gemma3: 2 x 1.2 GB/step).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = dist.mesh
+    vocab_axis = dist.rules.get("vocab")
+    n = dist.nshards("vocab", table.shape[0])
+    rows = table.shape[0] // n
+    batch_spec = dist.spec("batch", shape=(tokens.shape[0],))[0]
+
+    def local(tab, toks):
+        shard = jax.lax.axis_index(vocab_axis)
+        lo = shard.astype(jnp.int32) * rows
+        loc = toks - lo
+        ok = (loc >= 0) & (loc < rows)
+        x = jnp.take(tab, jnp.clip(loc, 0, rows - 1), axis=0)
+        x = jnp.where(ok[..., None], x, 0).astype(dtype)
+        return jax.lax.psum(x, vocab_axis)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(vocab_axis, None), P(batch_spec, None)),
+        out_specs=P(batch_spec, None, None),
+        check_vma=False,
+    )(table, tokens)
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array, dist: Distribution):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return dist.constrain(logits, "batch", None, "vocab")
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            dist: Distribution, mode: str = "train"):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    x, aux = forward_hidden(cfg, params, tokens, dist=dist, mode=mode)
+    return unembed(cfg, params, x, dist), aux
+
+
+def forward_hidden(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+                   dist: Distribution, mode: str = "train"):
+    """Forward up to the final norm (pre-unembed)."""
+    x = embed_tokens(cfg, params, tokens, dist)
+    window, theta = layer_flags(cfg)
+
+    def layer(x, p_l, w_l, t_l):
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        x = x + attn.self_attention(
+            cfg, p_l, h, dist=dist, mode=mode, window=w_l, theta=t_l
+        )
+        x = dist.constrain(x, "batch", "seq", "embed")
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, aux = moe_mod.moe_block(cfg, p_l, h, dist=dist, mode=mode)
+        else:
+            y, aux = swiglu_mlp(p_l, h, dist), 0.0
+        x = dist.constrain(x + y, "batch", "seq", "embed")
+        return x, aux
+
+    body = layer
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(layer)
+
+    def scan_fn(carry, xs):
+        x, aux_sum = carry
+        p_l, w_l, t_l = xs
+        x, aux = body(x, p_l, w_l, t_l)
+        return (x, aux_sum + aux), None
+
+    from repro.models.runtime_flags import scan_unroll
+
+    (x, aux), _ = jax.lax.scan(
+        scan_fn, (x, jnp.float32(0.0)), (params["layers"], window, theta),
+        unroll=scan_unroll(cfg.n_layers),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / cfg.n_layers
+
+
+def _ce(cfg, params, x, labels, dist):
+    logits = unembed(cfg, params, x, dist).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((lse - ll) * mask).sum(), mask.sum()
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, dist: Distribution):
+    """Next-token CE (labels = tokens shifted by caller); labels < 0 masked.
+
+    ``cfg.loss_chunk`` > 0 computes the CE over sequence chunks so the full
+    (B, S, V) logits tensor never materializes (§Perf memory iteration)."""
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"], dist=dist,
+                                 mode="train")
+    labels = batch["labels"]
+    S = hidden.shape[1]
+    if cfg.loss_chunk and S % cfg.loss_chunk == 0 and S > cfg.loss_chunk:
+        n = S // cfg.loss_chunk
+        B = hidden.shape[0]
+        hc = hidden.reshape(B, n, cfg.loss_chunk, -1).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n, cfg.loss_chunk).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            h, l = xs
+            se, cnt = _ce(cfg, params, h, l, dist)
+            return (carry[0] + se, carry[1] + cnt), None
+
+        (se, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc))
+        ce = se / jnp.maximum(cnt, 1.0)
+    else:
+        se, cnt = _ce(cfg, params, hidden, labels, dist)
+        ce = se / jnp.maximum(cnt, 1.0)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode ----
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": Def((L, batch, max_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "v": Def((L, batch, max_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, *, dist: Distribution):
+    """One token for every sequence.  tokens (B, 1); pos scalar int32 (the
+    position being written).  Returns (logits (B, 1, V), new cache)."""
+    x = embed_tokens(cfg, params, tokens, dist)
+    x = dist.constrain(x, "batch", None, "embed")
+    window, theta = layer_flags(cfg)
+
+    def scan_fn(x, xs):
+        p_l, k_l, v_l, w_l, t_l = xs
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        a, new_kv = attn.decode_self_attention(
+            cfg, p_l, h, {"k": k_l, "v": v_l}, pos, dist=dist, window=w_l, theta=t_l
+        )
+        x = x + a
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_mod.moe_block(cfg, p_l, h, dist=dist, mode="decode")
+        else:
+            y = swiglu_mlp(p_l, h, dist, seq_axis=None)
+        x = dist.constrain(x + y, "batch", None, "embed")
+        return x, (new_kv["k"], new_kv["v"])
+
+    from repro.models.runtime_flags import scan_unroll
+
+    x, (ks, vs) = jax.lax.scan(
+        scan_fn, x, (params["layers"], cache["k"], cache["v"], window, theta),
+        unroll=scan_unroll(cfg.n_layers),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x, dist)
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            dist: Distribution, max_len: Optional[int] = None):
+    """Forward that also emits the KV cache (padded to max_len)."""
+    x = embed_tokens(cfg, params, tokens, dist)
+    S = x.shape[1]
+    max_len = max_len or S
+    window, theta = layer_flags(cfg)
+    Dh = cfg.resolved_head_dim
+
+    def scan_fn(x, xs):
+        p_l, w_l, t_l = xs
+        h = rms_norm(x, p_l["attn_norm"], cfg.norm_eps)
+        B = h.shape[0]
+        q, k, v = attn._project(cfg, p_l, h)
+        positions = jnp.arange(S)
+        from repro.models.layers import flash_attention, rope
+
+        q = rope(q, positions, t_l)
+        k = rope(k, positions, t_l)
+        q = dist.constrain(q, "batch", "seq", None, None)
+        k = dist.constrain(k, "batch", None, None, None)
+        v = dist.constrain(v, "batch", None, None, None)
+        o = flash_attention(q, k, v, causal=True, window=w_l)
+        x = x + attn._out(cfg, p_l, o, dist, "seq")
+        h = rms_norm(x, p_l["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            y, _ = moe_mod.moe_block(cfg, p_l, h, dist=dist, mode="prefill")
+        else:
+            y = swiglu_mlp(p_l, h, dist)
+        x = dist.constrain(x + y, "batch", "seq", "embed")
+        if max_len > S:
+            k = jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+        k = dist.constrain(k, "batch", "kv_seq", None, None)
+        v = dist.constrain(v, "batch", "kv_seq", None, None)
+        return x, (k, v)
+
+    from repro.models.runtime_flags import scan_unroll
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"], window, theta),
+                               unroll=scan_unroll(cfg.n_layers))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x[:, -1:], dist)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,110 @@
+"""Sharding-aware checkpoint/restore (fault tolerance layer).
+
+* ``save_checkpoint``   — gathers leaves to host, writes one .npz atomically
+                          (tmp + os.replace), records the step.
+* ``restore_checkpoint``— loads and (optionally) device_puts every leaf to the
+                          shardings of a template pytree — restoring onto a
+                          *different* mesh (elastic shrink/grow) just works.
+* ``AsyncCheckpointer`` — background-thread writer so the train loop never
+                          blocks on persistence (checkpoint/restart at scale).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import re
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    arrays["__step"] = np.asarray(step)
+    path = ckpt_dir / f"ckpt_{step:08d}.npz"
+    tmp = ckpt_dir / f".tmp_ckpt_{step:08d}.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)  # atomic publish
+    return str(path)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    cands = sorted(d.glob("ckpt_*.npz"))
+    return str(cands[-1]) if cands else None
+
+
+def restore_checkpoint(path: str, like: Any) -> tuple:
+    """Returns (step, tree) with every leaf resharded like ``like``'s leaves
+    (which may be arrays or ShapeDtypeStructs with shardings)."""
+    data = np.load(path)
+    step = int(data["__step"])
+    leaves, treedef = _flatten(like)
+    out = []
+    for i, l in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        sharding = getattr(l, "sharding", None)
+        if sharding is not None and not isinstance(sharding, type(None)):
+            try:
+                out.append(jax.device_put(arr, sharding))
+                continue
+            except Exception:
+                pass
+        out.append(jax.numpy.asarray(arr, dtype=l.dtype))
+    return step, jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget checkpoint writer with a bounded queue (depth 1: a
+    newer snapshot supersedes an unwritten older one)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        self.last_saved: Optional[str] = None
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            self.last_saved = save_checkpoint(self.ckpt_dir, step, tree)
+            self._gc()
+
+    def _gc(self):
+        cands = sorted(Path(self.ckpt_dir).glob("ckpt_*.npz"))
+        for p in cands[: -self.keep]:
+            p.unlink(missing_ok=True)
+
+    def save(self, step: int, tree: Any):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        try:
+            self._q.put_nowait((step, host_tree))
+        except queue.Full:
+            try:
+                self._q.get_nowait()  # drop the stale snapshot
+            except queue.Empty:
+                pass
+            self._q.put_nowait((step, host_tree))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=30)

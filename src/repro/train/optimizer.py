@@ -1,0 +1,57 @@
+"""AdamW (pure pytree implementation — no optax dependency).
+
+Moments are kept in f32 and inherit each parameter's sharding via GSPMD
+propagation (zeros_like), so optimizer state shards exactly like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamW(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          grad_clip: float = 1.0) -> AdamW:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip > 0:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-12
+            )
+            scale = jnp.minimum(1.0, grad_clip / gnorm)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return AdamW(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,78 @@
+"""Fine-grained training pipeline (paper §5) + straggler mitigation.
+
+* ``Prefetcher``: background thread running the sampling server (batch
+  generation + neighbor sampling + feature extraction against the unified
+  cache) while the device trains batch i — the inter-batch pipeline of
+  Figure 7.  JAX's async dispatch supplies the device-side overlap.
+* ``StragglerMonitor``: EWMA step-time tracker flagging outlier steps; at
+  fleet scale its per-host summaries feed backup-task dispatch — here it
+  drives logging and the queue-depth guard.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+
+class Prefetcher:
+    def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2):
+        self._batch_fn = batch_fn
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = 0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._exc: Optional[BaseException] = None
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            while not self._stop.is_set():
+                batch = self._batch_fn(self._step)
+                self._step += 1
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(batch, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surfaced on next get()
+            self._exc = e
+
+    def get(self, timeout: float = 60.0) -> dict:
+        if self._exc is not None:
+            raise self._exc
+        return self._q.get(timeout=timeout)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: Optional[float] = None
+        self.stragglers = 0
+        self.steps = 0
+        self.worst: float = 0.0
+
+    def record(self, step_time: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.steps += 1
+        self.worst = max(self.worst, step_time)
+        if self.ewma is None:
+            self.ewma = step_time
+            return False
+        is_straggler = step_time > self.threshold * self.ewma
+        if is_straggler:
+            self.stragglers += 1
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+        return is_straggler
+
+    def summary(self) -> dict:
+        return {"steps": self.steps, "ewma_s": self.ewma,
+                "stragglers": self.stragglers, "worst_s": self.worst}

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness, plus one decode step (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import encdec, get_module
+from repro.models.params import init_from_defs
+from repro.models.sharding import Distribution
+
+DIST = Distribution.single_device()
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.family in ("audio", "encdec"):
+        St = 16
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, St), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (B, St), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    key = jax.random.PRNGKey(0)
+    cfg = get_config(arch, smoke=True)
+    mod = get_module(cfg)
+    params = init_from_defs(mod.defs(cfg), key)
+    batch = _batch(cfg, key)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: mod.loss_fn(cfg, p, batch, dist=DIST), has_aux=True)(params)
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    key = jax.random.PRNGKey(0)
+    cfg = get_config(arch, smoke=True)
+    mod = get_module(cfg)
+    params = init_from_defs(mod.defs(cfg), key)
+    batch = _batch(cfg, key)
+    tok = batch["tokens"][:, :1]
+    if cfg.family in ("audio", "encdec"):
+        enc = encdec.encode(cfg, params, batch["frames"], dist=DIST, mode="prefill")
+        cache = encdec.make_cache(cfg, params, enc, 8, dist=DIST)
+    elif cfg.family in ("ssm", "hybrid"):
+        cache = mod.init_state(cfg, B, 16)
+    else:
+        cache = mod.init_cache(cfg, B, 16)
+    logits, cache2 = mod.decode_step(cfg, params, cache, tok, jnp.int32(0), dist=DIST)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache changed
+    l0 = jax.tree.leaves(cache)
+    l1 = jax.tree.leaves(cache2)
+    assert any(not np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+               for a, b in zip(l0, l1))
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "qwen2.5-14b", "mamba2-780m",
+                                  "zamba2-1.2b"])
+def test_smoke_prefill_consistency(arch):
+    """prefill logits == forward last-position logits."""
+    key = jax.random.PRNGKey(1)
+    cfg = get_config(arch, smoke=True)
+    mod = get_module(cfg)
+    params = init_from_defs(mod.defs(cfg), key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_fwd, _ = mod.forward(cfg, params, tokens, dist=DIST, mode="prefill")
+    logits_pre, cache = mod.prefill(cfg, params, tokens, dist=DIST)
+    # compare distributions (bf16 op-order divergence across the two traced
+    # programs is amplified by deep SSM decay chains; semantics must agree)
+    pa = jax.nn.log_softmax(logits_pre[:, 0].astype(jnp.float32), -1)
+    pb = jax.nn.log_softmax(logits_fwd[:, -1].astype(jnp.float32), -1)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), rtol=6e-2,
+                               atol=6e-2)

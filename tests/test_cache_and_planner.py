@@ -1,0 +1,106 @@
+"""Unified cache extraction + traffic accounting + planner + elastic replan."""
+import numpy as np
+import pytest
+
+from repro.core.cliques import topology_matrix
+from repro.core.planner import build_plan, replan_on_topology_change
+from repro.core.unified_cache import TrafficCounter
+from repro.graph.csr import powerlaw_graph
+from repro.graph.sampling import host_sample_batch, unique_vertices
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = powerlaw_graph(8000, 12, seed=2, feat_dim=16)
+    plan = build_plan(g, topology_matrix("nv4"), mem_per_device=500_000,
+                      batch_size=512, seed=0)
+    return g, plan
+
+
+def test_extraction_correct(setup):
+    g, plan = setup
+    cache = plan.caches[0]
+    ids = np.unique(np.random.default_rng(0).integers(0, g.n, 500))
+    out = cache.extract_features(ids, 0, None)
+    np.testing.assert_allclose(out, g.get_features(ids), rtol=1e-6)
+
+
+def test_hit_rate_increases_with_budget(setup):
+    g, _ = setup
+    rates = []
+    for mem in (50_000, 500_000, 5_000_000):
+        plan = build_plan(g, topology_matrix("nv4"), mem_per_device=mem,
+                          batch_size=512, seed=0)
+        counter = TrafficCounter(n_devices=8)
+        rng = np.random.default_rng(1)
+        cache = plan.caches[0]
+        for d in plan.partition.cliques[0]:
+            seeds = plan.partition.tablets[d][:512]
+            levels = host_sample_batch(g, seeds, (10, 5), rng)
+            cache.extract_features(unique_vertices(levels), d, counter)
+        rates.append(counter.feature_hit_rate)
+    assert rates[0] < rates[1] < rates[2] or rates[2] > 0.95
+
+
+def test_traffic_matrix_shape(setup):
+    g, plan = setup
+    counter = TrafficCounter(n_devices=8)
+    cache = plan.caches[0]
+    ids = np.unique(np.random.default_rng(0).integers(0, g.n, 300))
+    cache.extract_features(ids, 1, counter)
+    assert counter.bytes_matrix.shape == (8, 9)
+    assert counter.bytes_matrix.sum() > 0
+
+
+def test_cost_model_predicts_measured_transactions(setup):
+    """Fig. 13-style check: predicted N_F ~ measured misses x tx/row."""
+    g, plan = setup
+    ci = 0
+    cm = plan.cost_plans[ci]["cost_model"]
+    cache = plan.caches[ci]
+    counter = TrafficCounter(n_devices=8)
+    rng = np.random.default_rng(7)
+    for d in plan.partition.cliques[ci]:
+        for _ in range(4):
+            seeds = plan.partition.tablets[d][
+                rng.integers(0, len(plan.partition.tablets[d]), 256)]
+            levels = host_sample_batch(g, seeds, (25, 10), rng)
+            cache.extract_features(unique_vertices(levels), d, counter)
+    measured_miss = counter.feature_requests - counter.feature_hits
+    assert counter.feature_requests > 0
+    predicted_frac = cm.N_F(cache.feat_bytes) / max(cm.N_F(0), 1)
+    measured_frac = measured_miss / counter.feature_requests
+    # pre-sampling estimates the same distribution -> within loose bounds
+    assert abs(predicted_frac - measured_frac) < 0.35
+
+
+def test_elastic_replan_preserves_training_set(setup):
+    g, plan = setup
+    alive = [0, 1, 2, 4, 5, 6, 7]
+    plan2 = replan_on_topology_change(g, plan, topology_matrix("nv4"), alive=alive)
+    assert all(3 not in c for c in plan2.partition.cliques)
+    old = np.sort(np.concatenate(list(plan.partition.tablets.values())))
+    new = np.sort(np.concatenate(list(plan2.partition.tablets.values())))
+    np.testing.assert_array_equal(old, new)
+    assert len(plan2.caches) == len(plan2.partition.cliques)
+
+
+def test_device_sample_cached_valid(setup):
+    """Device-side sampling from the HBM topology cache returns true
+    neighbors for cached vertices and -1 for misses."""
+    import jax
+
+    g, plan = setup
+    cache = plan.caches[0]
+    assert len(cache.topo_ids) > 0
+    seeds = np.concatenate([cache.topo_ids[:16],  # guaranteed hits
+                            np.array([int(v) for v in range(g.n)
+                                      if cache.topo_pos[v] < 0][:4])])
+    out, hit = cache.device_sample_cached(seeds, 5, jax.random.PRNGKey(0))
+    out, hit = np.asarray(out), np.asarray(hit)
+    assert hit[:16].all() and not hit[16:].any()
+    for i, v in enumerate(seeds[:16]):
+        nb = set(g.neighbors(int(v)).tolist())
+        for u in out[i]:
+            assert (u == -1 and not nb) or int(u) in nb
+    assert (out[16:] == -1).all()

@@ -1,0 +1,44 @@
+"""Checkpoint roundtrip + atomicity + async writer."""
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                                    restore_checkpoint, save_checkpoint)
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, t)
+        path = latest_checkpoint(d)
+        step, out = restore_checkpoint(path, t)
+        assert step == 7
+        np.testing.assert_array_equal(out["a"], t["a"])
+        np.testing.assert_array_equal(out["b"]["c"], t["b"]["c"])
+
+
+def test_latest_picks_max_step():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, t)
+        save_checkpoint(d, 12, t)
+        assert latest_checkpoint(d).endswith("ckpt_00000012.npz")
+
+
+def test_async_checkpointer():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3):
+            ck.save(s, t)
+            time.sleep(0.05)
+        ck.close()
+        assert latest_checkpoint(d) is not None

@@ -1,0 +1,55 @@
+"""MaxCliqueDyn / clique cover: exactness vs brute force (hypothesis)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cliques import clique_cover, max_clique, topology_matrix
+
+
+def brute_force_max_clique(adj):
+    n = adj.shape[0]
+    best = []
+    for r in range(n, 0, -1):
+        for sub in itertools.combinations(range(n), r):
+            if all(adj[a, b] for a, b in itertools.combinations(sub, 2)):
+                return list(sub)
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 9), st.floats(0.1, 0.9), st.integers(0, 1000))
+def test_max_clique_matches_brute_force(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < p
+    adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    got = max_clique(adj)
+    want = brute_force_max_clique(adj)
+    assert len(got) == len(want)
+    assert all(adj[a, b] for a, b in itertools.combinations(got, 2))
+
+
+@pytest.mark.parametrize("kind,sizes", [
+    ("nv2", [2, 2, 2, 2]), ("nv4", [4, 4]), ("nv8", [8]), ("nonv", [1] * 8),
+    ("tpu-2pod", [4, 4]),
+])
+def test_reference_topologies(kind, sizes):
+    cl = clique_cover(topology_matrix(kind))
+    assert sorted(len(c) for c in cl) == sorted(sizes)
+    covered = sorted(v for c in cl for v in c)
+    assert covered == list(range(8))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.floats(0.0, 1.0), st.integers(0, 100))
+def test_clique_cover_is_partition(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < p
+    adj = adj | adj.T
+    cl = clique_cover(adj)
+    covered = sorted(v for c in cl for v in c)
+    assert covered == list(range(n))
+    for c in cl:
+        assert all(adj[a, b] for a, b in itertools.combinations(c, 2))

@@ -1,0 +1,18 @@
+"""int8 error-feedback compression: quantization + EF accumulation."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.compression import quantize_int8, wire_bytes_saved
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)).astype(np.float32))
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_wire_bytes_ratio():
+    params = {"w": jnp.zeros((100, 10))}
+    s = wire_bytes_saved(params)
+    assert s["ratio"] == 4.0 and s["int8_bytes"] == 1000

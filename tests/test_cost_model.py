@@ -1,0 +1,53 @@
+"""Cost model (Eq. 2-6): monotonicity, optimality of the sweep, knapsack wins."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CliqueCostModel
+from repro.core.cslp import cslp
+from repro.core.hotness import presample_clique
+from repro.graph.csr import powerlaw_graph
+
+
+@pytest.fixture(scope="module")
+def cm():
+    g = powerlaw_graph(3000, 10, seed=5, feat_dim=32)
+    tablets = [np.arange(0, g.n, 3), np.arange(1, g.n, 3)]
+    st_ = presample_clique(g, tablets, fanouts=(5, 3), batch_size=256)
+    res = cslp(st_.H_T, st_.H_F)
+    return CliqueCostModel.build(g, res, st_.N_TSUM)
+
+
+def test_N_T_monotone_decreasing(cm):
+    sizes = np.linspace(0, cm.topo_csum_bytes[-1] * 1.1, 30)
+    vals = [cm.N_T(s) for s in sizes]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[0] == pytest.approx(cm.N_TSUM)
+    assert vals[-1] == pytest.approx(0.0)
+
+
+def test_N_F_monotone_decreasing(cm):
+    sizes = np.linspace(0, len(cm.Q_F) * cm.feat_bytes * 1.1, 30)
+    vals = [cm.N_F(s) for s in sizes]
+    assert all(a >= b - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == pytest.approx(0.0)
+
+
+@pytest.mark.parametrize("budget_frac", [0.05, 0.3, 0.8])
+def test_alpha_sweep_optimal_on_grid(cm, budget_frac):
+    B = budget_frac * (cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes)
+    plan = cm.plan(B)
+    for a in np.arange(0, 1.001, 0.01):
+        assert plan["N_total"] <= cm.N_total(B, a) + 1e-6
+
+
+@pytest.mark.parametrize("budget_frac", [0.05, 0.3, 0.8])
+def test_knapsack_not_worse_than_sweep(cm, budget_frac):
+    B = budget_frac * (cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes)
+    assert cm.plan_knapsack(B)["N_total"] <= cm.plan(B)["N_total"] + 1e-6
+
+
+def test_budget_respected(cm):
+    B = 0.25 * (cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes)
+    kn = cm.plan_knapsack(B)
+    assert kn["m_T"] + kn["m_F"] <= B + 1e-6

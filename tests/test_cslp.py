@@ -1,0 +1,32 @@
+"""Algorithm 1 (CSLP) invariants, property-based."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cslp import cslp
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 4), st.integers(5, 60), st.integers(0, 999))
+def test_cslp_invariants(k_g, n, seed):
+    rng = np.random.default_rng(seed)
+    H_T = rng.integers(0, 50, size=(k_g, n))
+    H_F = rng.integers(0, 50, size=(k_g, n))
+    res = cslp(H_T, H_F)
+    # accumulation is column-wise sum
+    np.testing.assert_array_equal(res.A_T, H_T.sum(0))
+    np.testing.assert_array_equal(res.A_F, H_F.sum(0))
+    # Q is hotness-descending
+    assert (np.diff(res.A_T[res.Q_T]) <= 0).all()
+    assert (np.diff(res.A_F[res.Q_F]) <= 0).all()
+    # each hot vertex assigned exactly once, to the argmax device
+    all_t = np.concatenate(res.G_T) if res.G_T else np.array([], int)
+    assert len(np.unique(all_t)) == len(all_t)
+    assert set(all_t.tolist()) == set(res.Q_T.tolist())
+    for g, q in enumerate(res.G_T):
+        for v in q[:10]:
+            assert H_T[g, v] == H_T[:, v].max()
+    # per-device queues preserve clique-level priority order
+    pos = {v: i for i, v in enumerate(res.Q_T)}
+    for q in res.G_T:
+        idx = [pos[v] for v in q]
+        assert idx == sorted(idx)

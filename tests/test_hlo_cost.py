@@ -1,0 +1,51 @@
+"""Trip-count-aware HLO cost parser: scan == unroll, grad ~3x forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+N, L = 256, 6
+
+
+def _scan_fn(x, w):
+    return jax.lax.scan(lambda x, wl: (jnp.dot(x, wl), None), x, w)[0]
+
+
+@pytest.fixture(scope="module")
+def costs():
+    w = jnp.zeros((L, N, N))
+    x = jnp.zeros((4, N))
+
+    def unroll_fn(x, w):
+        for i in range(L):
+            x = jnp.dot(x, w[i])
+        return x
+
+    cs = analyze(jax.jit(_scan_fn).lower(x, w).compile().as_text())
+    cu = analyze(jax.jit(unroll_fn).lower(x, w).compile().as_text())
+    return cs, cu
+
+
+def test_scan_flops_match_unroll(costs):
+    cs, cu = costs
+    expect = 2 * 4 * N * N * L
+    assert abs(cs["flops"] - expect) / expect < 0.05
+    assert abs(cu["flops"] - expect) / expect < 0.05
+
+
+def test_grad_scan_flops():
+    w = jnp.zeros((L, N, N))
+    x = jnp.zeros((4, N))
+
+    def loss(w):
+        return jnp.sum(_scan_fn(x, w) ** 2)
+
+    c = analyze(jax.jit(jax.grad(loss)).lower(w).compile().as_text())
+    expect = 3 * 2 * 4 * N * N * L
+    assert abs(c["flops"] - expect) / expect < 0.1
+
+
+def test_collectives_empty_on_single_device(costs):
+    cs, _ = costs
+    assert cs["coll_total_bytes"] == 0

@@ -1,0 +1,54 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("N,D,B", [(64, 128, 16), (100, 256, 33), (7, 128, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_matches_ref(N, D, B, dtype):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (N, D), dtype)
+    idx = jnp.asarray(np.random.default_rng(0).integers(-2, N, size=B), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.gather_rows(table, idx), np.float32),
+        np.asarray(ref.gather_rows(table, idx), np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("N,D,B,F", [(64, 128, 8, 5), (128, 256, 16, 10),
+                                     (32, 128, 4, 25)])
+def test_sage_aggregate_matches_ref(N, D, B, F):
+    key = jax.random.PRNGKey(1)
+    table = jax.random.normal(key, (N, D))
+    rng = np.random.default_rng(1)
+    idx = jnp.asarray(rng.integers(-1, N, size=(B, F)), jnp.int32)
+    w = jnp.asarray(rng.random((B, F)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.sage_aggregate(table, idx, w)),
+                               np.asarray(ref.sage_aggregate(table, idx, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("BH,S,Dh", [(4, 256, 64), (2, 128, 128), (1, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(BH, S, Dh, causal, dtype):
+    key = jax.random.PRNGKey(2)
+    q = (jax.random.normal(jax.random.fold_in(key, 1), (BH, S, Dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(key, 2), (BH, S, Dh)) * 0.5).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (BH, S, Dh)).astype(dtype)
+    tol = 2e-3 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(ops.flash_attention(q, k, v, causal=causal), np.float32),
+        np.asarray(ref.flash_attention(q, k, v, causal=causal), np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_block_size_invariance():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (2, 256, 64))
+    a = ops.flash_attention(q, q, q, block_q=128, block_k=128)
+    b = ops.flash_attention(q, q, q, block_q=64, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,155 @@
+"""Model zoo: SSD equivalences, flash vs dense attention, MoE paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba2, moe
+from repro.models.params import init_from_defs
+from repro.models.sharding import Distribution
+
+DIST = Distribution.single_device()
+KEY = jax.random.PRNGKey(0)
+
+
+def _ref_attn(q, k, v, causal=True, window=0):
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh) * (Dh ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= qp - kp < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dh)
+
+
+@pytest.mark.parametrize("Sq,Sk,Hq,Hkv,Dh,causal,win", [
+    (64, 64, 4, 2, 16, True, 0), (32, 32, 8, 8, 8, True, 5),
+    (16, 48, 4, 1, 32, False, 0)])
+def test_flash_attention_jnp(Sq, Sk, Hq, Hkv, Dh, causal, win):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, Sq, Hq, Dh))
+    k = jax.random.normal(ks[1], (2, Sk, Hkv, Dh))
+    v = jax.random.normal(ks[2], (2, Sk, Hkv, Dh))
+    out = layers.flash_attention(q, k, v, causal=causal, window=win, block_kv=16)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(_ref_attn(q, k, v, causal, win)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_vs_sequential(chunk):
+    B, S, H, P, G, N = 2, 64, 4, 8, 1, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D_ = jax.random.normal(ks[5], (H,)) * 0.1
+    y_ref, h_ref = mamba2.ssd_sequential(x, dt, A, B_, C_, D_)
+    y_c, h_c = mamba2.ssd_chunked(x, dt, A, B_, C_, D_, chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_state_continuation():
+    B, S, H, P, G, N = 1, 48, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D_ = jnp.zeros((H,))
+    y_ref, h_ref = mamba2.ssd_sequential(x, dt, A, B_, C_, D_)
+    y1, h1 = mamba2.ssd_chunked(x[:, :24], dt[:, :24], A, B_[:, :24], C_[:, :24], D_, 8)
+    y2, h2 = mamba2.ssd_chunked(x[:, 24:], dt[:, 24:], A, B_[:, 24:], C_[:, 24:], D_, 8, h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_ref), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_decode_matches_full():
+    cfg = ModelConfig(name="m", family="ssm", n_layers=1, d_model=32, n_heads=0,
+                      n_kv_heads=0, d_ff=0, vocab_size=64, ssm_state=16,
+                      ssm_headdim=8, ssm_expand=2, ssd_chunk=16)
+    p = init_from_defs(mamba2.mamba_defs(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 24, 32)) * 0.5
+    out_full, h_full = mamba2.mamba_block(cfg, p, x, dist=DIST)
+    st = mamba2.init_mamba_state(cfg, 2, dtype=jnp.float32)
+    outs = []
+    for t in range(24):
+        o, st = mamba2.mamba_decode_step(cfg, p, x[:, t:t + 1], st, dist=DIST)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(h_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_dense_decode_matches_dispatch():
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=128, n_experts=4,
+                      top_k=2, capacity_factor=8.0)
+    p = init_from_defs(moe.moe_defs(cfg), KEY)
+    x = jax.random.normal(KEY, (4, 16, 32))
+    out_train, _ = moe.moe_block(cfg, p, x, dist=DIST, mode="train")
+    out_dec, _ = moe.moe_block(cfg, p, x, dist=DIST, mode="decode")
+    np.testing.assert_allclose(np.asarray(out_train, np.float32),
+                               np.asarray(out_dec, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+                      n_kv_heads=2, d_ff=32, vocab_size=64, n_experts=2,
+                      top_k=1, capacity_factor=0.1)
+    p = init_from_defs(moe.moe_defs(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 32, 16))
+    out, aux = moe.moe_block(cfg, p, x, dist=DIST, mode="train")
+    assert jnp.isfinite(out).all() and jnp.isfinite(aux)
+
+
+def test_chunked_loss_matches_plain():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_from_defs
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = init_from_defs(T.defs(cfg), KEY)
+    batch = {"tokens": jax.random.randint(jax.random.fold_in(KEY, 1), (2, 32),
+                                          0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.fold_in(KEY, 2), (2, 32),
+                                          0, cfg.vocab_size)}
+    l0, _ = T.loss_fn(cfg, params, batch, dist=DIST)
+    l1, _ = T.loss_fn(dataclasses.replace(cfg, loss_chunk=8), params, batch,
+                      dist=DIST)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_ssd_bf16_path_close_to_oracle():
+    B, S, H, P, G, N = 2, 64, 4, 8, 1, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B_ = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    D_ = jax.random.normal(ks[5], (H,)) * 0.1
+    y_ref, _ = mamba2.ssd_sequential(x, dt, A, B_, C_, D_)
+    y_b, _ = mamba2.ssd_chunked(x, dt, A, B_, C_, D_, 16,
+                                compute_dtype=jnp.bfloat16)
+    rel = float(jnp.abs(y_b - y_ref).max()) / float(jnp.abs(y_ref).max())
+    assert rel < 0.05

@@ -1,0 +1,40 @@
+"""Hierarchical partitioning: balance, edge-cut, tablet disjointness."""
+import numpy as np
+import pytest
+
+from repro.core.cliques import topology_matrix
+from repro.core.partition import (edge_cut_fraction, hierarchical_partition,
+                                  partition_graph)
+from repro.graph.csr import powerlaw_graph
+
+
+@pytest.fixture(scope="module")
+def g():
+    return powerlaw_graph(5000, 12, seed=3, feat_dim=16)
+
+
+def test_ldg_beats_hash_edge_cut(g):
+    cut_ldg = edge_cut_fraction(g, partition_graph(g, 4, method="ldg"))
+    cut_hash = edge_cut_fraction(g, partition_graph(g, 4, method="hash"))
+    assert cut_ldg < cut_hash
+
+
+def test_partition_balance(g):
+    part = partition_graph(g, 4, method="ldg")
+    counts = np.bincount(part, minlength=4)
+    assert counts.max() <= 1.3 * g.n / 4
+
+
+@pytest.mark.parametrize("kind,k_c,k_g", [("nv2", 4, 2), ("nv4", 2, 4), ("nv8", 1, 8)])
+def test_hierarchical_tablets(g, kind, k_c, k_g):
+    train = np.arange(0, g.n, 7)
+    plan = hierarchical_partition(g, train, topology_matrix(kind))
+    assert plan.k_c == k_c
+    assert all(len(c) == k_g for c in plan.cliques)
+    allv = np.concatenate([plan.tablets[d] for d in range(8)])
+    # S3/S4: tablets partition the training set exactly
+    assert sorted(allv.tolist()) == sorted(train.tolist())
+    # intra-clique hash split: tablet sizes balanced within a clique
+    for c in plan.cliques:
+        sizes = [len(plan.tablets[d]) for d in c]
+        assert max(sizes) - min(sizes) <= 0.2 * max(sizes) + 16

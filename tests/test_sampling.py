@@ -1,0 +1,41 @@
+"""Neighbor sampling validity: host and device samplers agree on semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.csr import powerlaw_graph
+from repro.graph.sampling import (device_sample, host_sample_batch,
+                                  unique_vertices)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 500))
+def test_host_sampled_are_neighbors(seed):
+    g = powerlaw_graph(500, 6, seed=1, feat_dim=8)
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, g.n, size=32)
+    levels = host_sample_batch(g, seeds, (5, 3), rng)
+    assert levels[1].shape == (32, 5) and levels[2].shape == (32, 5, 3)
+    for b in range(8):
+        nb = set(g.neighbors(seeds[b]).tolist())
+        deg = len(g.neighbors(seeds[b]))
+        for u in levels[1][b]:
+            assert (u == -1 and deg == 0) or int(u) in nb
+
+
+def test_device_sampler_valid():
+    g = powerlaw_graph(400, 6, seed=2, feat_dim=8)
+    indptr, indices = jnp.asarray(g.indptr), jnp.asarray(g.indices)
+    seeds = jnp.arange(0, 64, dtype=jnp.int32)
+    levels = device_sample(indptr, indices, seeds, (4, 2), jax.random.PRNGKey(0))
+    l1 = np.asarray(levels[1])
+    for b in range(16):
+        nb = set(g.neighbors(b).tolist())
+        for u in l1[b]:
+            assert (u == -1 and len(nb) == 0) or int(u) in nb
+
+
+def test_unique_vertices_drops_padding():
+    levels = [np.array([1, 2]), np.array([[3, -1], [1, 2]])]
+    assert unique_vertices(levels).tolist() == [1, 2, 3]
