@@ -20,6 +20,7 @@ repro.core (CLS=64B), identical to what the cost model optimizes.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Sequence
 
 import numpy as np
@@ -32,6 +33,10 @@ from repro.graph.csr import CSRGraph, powerlaw_graph
 from repro.graph.sampling import host_sample_batch, unique_vertices
 
 FANOUTS = (25, 10)
+
+# Batch pipeline used by the training benchmarks; run.py's --backend flag
+# (or REPRO_BATCH_BACKEND) flips every train_gnn call to the device path.
+BATCH_BACKEND = os.environ.get("REPRO_BATCH_BACKEND", "host")
 
 
 def default_graph(n: int = 40_000, seed: int = 0, feat_dim: int = 100) -> CSRGraph:

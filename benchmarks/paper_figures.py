@@ -12,6 +12,7 @@ from typing import List
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import (FANOUTS, build_system, default_graph, measure)
 from repro.core.cliques import topology_matrix
 from repro.core.cost_model import CliqueCostModel
@@ -149,7 +150,7 @@ def fig10_traffic_matrix() -> List[tuple]:
     g = default_graph(20_000)
     plan = build_plan(g, topology_matrix("nv4"), mem_per_device=g.n * 0.025 * g.feat_dim * 4,
                       batch_size=1024, seed=0)
-    counter = TrafficCounter(n_devices=8)
+    counter = TrafficCounter.for_plan(plan)
     rng = np.random.default_rng(3)
     for d in range(8):
         cache = plan.cache_for_device(d)
@@ -179,7 +180,8 @@ def fig11_convergence() -> List[tuple]:
                     lr=3e-3)
     rows = []
     for shuffle in ("local", "global"):
-        res = train_gnn(g, plan, cfg, steps=40, seed=0, shuffle=shuffle)
+        res = train_gnn(g, plan, cfg, steps=40, seed=0, shuffle=shuffle,
+                        backend=common.BATCH_BACKEND)
         rows.append((f"fig11/{shuffle}/final_loss", res.losses[-1],
                      f"acc={res.accs[-1]:.3f}"))
     return rows
@@ -263,7 +265,7 @@ def table3_partition_cost() -> List[tuple]:
     plan = build_plan(g, topology_matrix("nv4"), mem_per_device=5_000_000,
                       batch_size=512, seed=0)
     t0 = time.perf_counter()
-    train_gnn(g, plan, cfg, steps=5, seed=0)
+    train_gnn(g, plan, cfg, steps=5, seed=0, backend=common.BATCH_BACKEND)
     t_5steps = time.perf_counter() - t0
     steps_per_epoch = max(len(train) // cfg.batch_size, 1)
     rows = [
@@ -295,6 +297,61 @@ def bench_planner_comparison() -> List[tuple]:
     return rows
 
 
+def bench_batch_builder() -> List[tuple]:
+    """Beyond-paper: host vs device batch-pipeline build time.
+
+    Splits each backend's per-batch cost into the host phase (build_spec:
+    sampling + miss fetch) and the finalize phase (tensor assembly / cache
+    gather + H2D), the quantity the Fig. 7 pipeline overlaps with the train
+    step.  Device rows also report how many feature bytes stayed resident
+    in HBM (the PCIe traffic the paper's unified cache saves)."""
+    import jax
+
+    from repro.train.batch import make_batch_builder
+
+    g = default_graph(20_000)
+    plan = build_plan(g, topology_matrix("nv2"),
+                      mem_per_device=0.05 * g.n * g.feat_dim * S_FLOAT32,
+                      batch_size=1024, seed=0)
+    cache = plan.cache_for_device(0)
+    tablet = plan.partition.tablets[0]
+    rows = []
+    n_batches, bs = 8, 1024
+    for backend in ("host", "device"):
+        builder = make_batch_builder(backend, g, cache, FANOUTS, None, 0)
+        rng = np.random.default_rng(42)
+        # warmup (jit compile of the device gather path)
+        builder.build(tablet[rng.integers(0, len(tablet), bs)], rng)
+        t_spec = t_fin = 0.0
+        hbm_rows = total_rows = 0
+        rng = np.random.default_rng(43)
+        for _ in range(n_batches):
+            seeds = tablet[rng.integers(0, len(tablet), bs)]
+            t0 = time.perf_counter()
+            spec = builder.build_spec(seeds, rng)
+            t_spec += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            batch = builder.finalize(spec)
+            jax.block_until_ready(batch)
+            t_fin += time.perf_counter() - t0
+            total_rows += len(spec.ids)
+            if spec.hit is not None:
+                hbm_rows += int(spec.hit.sum())
+        rows.append((f"batchbuild/{backend}/spec_us_per_batch",
+                     t_spec / n_batches * 1e6, "host phase (prefetch thread)"))
+        rows.append((f"batchbuild/{backend}/finalize_us_per_batch",
+                     t_fin / n_batches * 1e6,
+                     "overlaps train step (device phase)"))
+        rows.append((f"batchbuild/{backend}/total_us_per_batch",
+                     (t_spec + t_fin) / n_batches * 1e6,
+                     f"backend={jax.default_backend()}"))
+        if backend == "device":
+            rows.append(("batchbuild/device/hbm_resident_rows_frac",
+                         hbm_rows / max(total_rows, 1),
+                         "feature rows never crossing PCIe"))
+    return rows
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -307,4 +364,5 @@ ALL_BENCHES = [
     ("fig13_cost_model_validation", fig13_cost_model_validation),
     ("table3_partition_cost", table3_partition_cost),
     ("planner_comparison", bench_planner_comparison),
+    ("batch_builder", bench_batch_builder),
 ]

@@ -3,9 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV: us_per_call is the benchmark's
 wall time per measured unit; each figure's metric rows follow as
 ``name,value,derived``.
+
+``--backend {host,device}`` selects the batch pipeline the training
+benchmarks run through (see repro.train.batch); ``--only SUBSTR`` filters
+benchmarks by name.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -15,10 +20,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
+    from benchmarks import common
     from benchmarks.paper_figures import ALL_BENCHES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["host", "device"],
+                    default=common.BATCH_BACKEND,
+                    help="batch pipeline for the training benchmarks")
+    ap.add_argument("--only", default="",
+                    help="run only benchmarks whose name contains this")
+    args = ap.parse_args()
+    common.BATCH_BACKEND = args.backend
 
     print("name,us_per_call,derived")
     for name, fn in ALL_BENCHES:
+        if args.only and args.only not in name:
+            continue
         t0 = time.perf_counter()
         try:
             rows = fn()

@@ -22,6 +22,9 @@ ap.add_argument("--full", action="store_true",
                 help="~100M-param model, a few hundred steps")
 ap.add_argument("--steps", type=int, default=0)
 ap.add_argument("--ckpt", default="/tmp/legion_sage_ckpt")
+ap.add_argument("--backend", choices=["host", "device"], default="host",
+                help="batch pipeline: host numpy path, or device-resident "
+                     "cache sampling + Pallas feature gather")
 args = ap.parse_args()
 
 if args.full:
@@ -37,9 +40,11 @@ n_params = 128 * hidden * 2 + hidden * hidden * 2 + hidden * 32
 print(f"training SAGE hidden={hidden} (~{n_params/1e6:.1f}M params) "
       f"for {steps} steps")
 res = train_gnn(g, plan, cfg, steps=steps, checkpoint_dir=args.ckpt,
-                checkpoint_every=50)
+                checkpoint_every=50, backend=args.backend)
 print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}   "
       f"final acc {res.accs[-1]:.3f}")
+print(f"backend {res.backend}  host build "
+      f"{res.pipeline['host_build_s_mean'] * 1e3:.1f} ms/batch")
 print(f"feature hit {res.counter.feature_hit_rate:.1%}  "
       f"topo hit {res.counter.topo_hit_rate:.1%}  "
       f"PCIe tx {res.counter.pcie_transactions}")

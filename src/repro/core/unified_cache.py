@@ -40,6 +40,17 @@ class TrafficCounter:
             self.bytes_matrix = np.zeros(
                 (self.n_devices, self.n_devices + 1), dtype=np.int64)
 
+    @classmethod
+    def for_devices(cls, devices) -> "TrafficCounter":
+        """Counter sized so every physical device id has its own column —
+        device ids are used directly as matrix indices (no modulo aliasing)."""
+        devices = list(devices)
+        return cls(n_devices=(max(devices) + 1) if devices else 1)
+
+    @classmethod
+    def for_plan(cls, plan) -> "TrafficCounter":
+        return cls.for_devices([d for c in plan.partition.cliques for d in c])
+
     def merge(self, other: "TrafficCounter"):
         self.bytes_matrix += other.bytes_matrix
         self.pcie_transactions += other.pcie_transactions
@@ -89,9 +100,17 @@ class CliqueCache:
         self.cache_indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
         if materialize:
             self.feat_cache = g.get_features(self.feat_ids) if len(self.feat_ids) else np.zeros((0, g.feat_dim), np.float32)
-            idx_chunks = [g.neighbors(v) for v in tids]
-            self.cache_indices = (np.concatenate(idx_chunks).astype(np.int32)
-                                  if idx_chunks else np.zeros(0, np.int32))
+            # vectorized adjacency copy: slot k of the cache CSR maps to
+            # g.indices[indptr[tids[row]] + (k - cache_indptr[row])]
+            if len(tids):
+                starts = g.indptr[tids]
+                total = int(self.cache_indptr[-1])
+                src = (np.arange(total, dtype=np.int64)
+                       - np.repeat(self.cache_indptr[:-1], deg)
+                       + np.repeat(starts, deg))
+                self.cache_indices = g.indices[src].astype(np.int32)
+            else:
+                self.cache_indices = np.zeros(0, np.int32)
         else:
             self.feat_cache = None
             self.cache_indices = None
@@ -99,12 +118,21 @@ class CliqueCache:
 
     # ---- device residency ----
     def device_arrays(self):
-        """jnp copies (lazy): the HBM-resident cache halves."""
+        """jnp copies (lazy): the HBM-resident cache halves.
+
+        ``feat_cache`` columns are padded once to the 128-lane boundary
+        (only when feat_dim exceeds one lane tile) so the per-batch Pallas
+        gather never re-pads the whole table; gather consumers slice back
+        to ``g.feat_dim``."""
         if self._device_arrays is None:
             import jax.numpy as jnp
 
+            fc = self.feat_cache
+            D = fc.shape[1]
+            if D > 128 and D % 128:
+                fc = np.pad(fc, ((0, 0), (0, 128 - D % 128)))
             self._device_arrays = {
-                "feat_cache": jnp.asarray(self.feat_cache),
+                "feat_cache": jnp.asarray(fc),
                 "feat_pos": jnp.asarray(self.feat_pos),
                 "cache_indptr": jnp.asarray(self.cache_indptr),
                 "cache_indices": jnp.asarray(self.cache_indices),
@@ -112,12 +140,18 @@ class CliqueCache:
             }
         return self._device_arrays
 
-    def device_sample_cached(self, seeds, fanout: int, key):
+    def device_sample_cached(self, seeds, fanout: int, key=None, *,
+                             rand=None):
         """Fixed-fanout neighbor sampling *on device* from the HBM-resident
         topology cache (the TPU analogue of Legion's GPU sampling).
 
         Seeds whose adjacency is cached sample from the cache CSR; misses
-        return -1 rows for the host pipeline to fill (and account as PCIe).
+        (uncached or negative/padded seeds) return -1 rows for the host
+        pipeline to fill (and account as PCIe).  Randomness comes either
+        from a jax PRNG ``key`` or from a precomputed host array ``rand``
+        of shape (B, fanout) — the latter lets the device path replay the
+        exact draws of the host sampler (bit-identical subgraphs, which the
+        host/device parity tests rely on).
         Returns (neighbors (B, fanout) int32, hit_mask (B,) bool).
         """
         import jax
@@ -125,12 +159,16 @@ class CliqueCache:
 
         da = self.device_arrays()
         seeds = jnp.asarray(seeds, jnp.int32)
-        pos = da["topo_pos"][seeds]
-        hit = pos >= 0
+        valid = seeds >= 0
+        pos = da["topo_pos"][jnp.where(valid, seeds, 0)]
+        hit = (pos >= 0) & valid
         safe = jnp.maximum(pos, 0)
         start = da["cache_indptr"][safe]
         deg = da["cache_indptr"][safe + 1] - start
-        r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
+        if rand is not None:
+            r = jnp.asarray(rand)
+        else:
+            r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
         offs = r % jnp.maximum(deg, 1)[:, None]
         idx = jnp.minimum(start[:, None] + offs,
                           max(len(self.cache_indices) - 1, 0))
@@ -147,31 +185,54 @@ class CliqueCache:
         return int(self.cache_indptr[-1]) * S_UINT32 + len(self.topo_ids) * S_UINT64
 
     # ---- accounting + extraction ----
+    def split_hits(self, ids: np.ndarray):
+        """Hit/miss split of a unique-vertex request against the feature
+        cache: returns (pos, hit) where ``pos[i]`` is the cache slot for
+        ``ids[i]`` (-1 on miss) and ``hit = pos >= 0``.  This is the only
+        sanctioned way for batch backends to read cache placement — they
+        must not poke at ``feat_pos`` directly."""
+        ids = np.asarray(ids, dtype=np.int64)
+        pos = self.feat_pos[ids]
+        return pos, pos >= 0
+
+    def account_feature_gather(self, pos: np.ndarray, hit: np.ndarray,
+                               requester_dev: int,
+                               counter: TrafficCounter) -> None:
+        """Traffic accounting for one feature gather, shared by the host and
+        device batch backends (identical counts by construction).  Hits are
+        charged to their owning device's column (physical device ids index
+        the matrix directly), misses to the CPU/PCIe column."""
+        n_miss = int((~hit).sum())
+        row_bytes = self.g.feat_dim * S_FLOAT32
+        tx_per_row = int(np.ceil(row_bytes / CLS))
+        counter.feature_requests += len(pos)
+        counter.feature_hits += int(hit.sum())
+        counter.pcie_transactions += tx_per_row * n_miss
+        counter.bytes_matrix[requester_dev, -1] += row_bytes * n_miss
+        if hit.any():
+            if max(self.devices) >= counter.n_devices:
+                raise ValueError(
+                    f"TrafficCounter(n_devices={counter.n_devices}) cannot "
+                    f"index clique devices {self.devices}; size it from the "
+                    "plan (TrafficCounter.for_plan / for_devices)")
+            owners = self.feat_owner[pos[hit]]
+            cnt = np.bincount(owners, minlength=len(self.devices))
+            np.add.at(counter.bytes_matrix[requester_dev],
+                      np.asarray(self.devices), row_bytes * cnt)
+
     def extract_features(self, ids: np.ndarray, requester_dev: int,
                          counter: Optional[TrafficCounter] = None) -> np.ndarray:
         """Gather rows for `ids` (unique sampled vertices of one batch),
         accounting hits (local/peer) and misses (CPU over PCIe)."""
         ids = np.asarray(ids, dtype=np.int64)
-        pos = self.feat_pos[ids]
-        hit = pos >= 0
+        pos, hit = self.split_hits(ids)
         out = np.empty((len(ids), self.g.feat_dim), dtype=np.float32)
         if hit.any():
             out[hit] = self.feat_cache[pos[hit]]
         if (~hit).any():
             out[~hit] = self.g.get_features(ids[~hit])
         if counter is not None:
-            row_bytes = self.g.feat_dim * S_FLOAT32
-            tx_per_row = int(np.ceil(row_bytes / CLS))
-            counter.feature_requests += len(ids)
-            counter.feature_hits += int(hit.sum())
-            counter.pcie_transactions += tx_per_row * int((~hit).sum())
-            counter.bytes_matrix[requester_dev, -1] += row_bytes * int((~hit).sum())
-            if hit.any():
-                owners = self.feat_owner[pos[hit]]
-                for gi in range(len(self.devices)):
-                    cnt = int((owners == gi).sum())
-                    if cnt:
-                        counter.bytes_matrix[requester_dev, self.devices[gi] % counter.n_devices] += row_bytes * cnt
+            self.account_feature_gather(pos, hit, requester_dev, counter)
         return out
 
     def sample_accounting(self, srcs: np.ndarray, fanout: int,

@@ -24,15 +24,19 @@ from repro.graph.csr import CSRGraph
 
 
 def host_sample_level(g: CSRGraph, seeds: np.ndarray, fanout: int,
-                      rng: np.random.Generator) -> np.ndarray:
+                      rng: np.random.Generator,
+                      rand: np.ndarray = None) -> np.ndarray:
     """(B,) seeds -> (B, fanout) sampled neighbors (-1 where deg==0).
-    seeds < 0 propagate -1."""
+    seeds < 0 propagate -1.  ``rand`` (B, fanout) overrides the draws so a
+    caller can replay the exact level (the cache-aware sampler reuses one
+    draw for its device and host halves)."""
     seeds = np.asarray(seeds, dtype=np.int64)
     valid = seeds >= 0
     sv = np.where(valid, seeds, 0)
     start = g.indptr[sv]
     deg = g.indptr[sv + 1] - start
-    r = rng.integers(0, 1 << 31, size=(len(seeds), fanout))
+    r = rng.integers(0, 1 << 31, size=(len(seeds), fanout)) \
+        if rand is None else rand
     has = (deg > 0) & valid
     offs = r % np.maximum(deg, 1)[:, None]
     idx = start[:, None] + offs
@@ -82,6 +86,52 @@ def device_sample(indptr: jax.Array, indices: jax.Array, seeds: jax.Array,
         levels.append(nxt.reshape(shape))
         frontier = levels[-1]
     return levels
+
+
+def cache_sample_level(g: CSRGraph, cache, seeds: np.ndarray, fanout: int,
+                       rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    """One sampling level through the unified cache: topology-cache hits
+    sample *on device* from the HBM-resident cache CSR
+    (``CliqueCache.device_sample_cached``); only the miss rows fall back to
+    the host CSR.  Both halves consume the same random draw, and the cache
+    CSR stores adjacency in host order, so the composed level is
+    bit-identical to ``host_sample_level`` — the host/device parity
+    guarantee.
+
+    Returns (neighbors (B, fanout) int64, topo_hit_mask (B,) bool).
+    """
+    seeds = np.asarray(seeds, dtype=np.int64)
+    r = rng.integers(0, 1 << 31, size=(len(seeds), fanout))
+    dev_out, hit = cache.device_sample_cached(seeds, fanout, rand=r)
+    out = np.asarray(dev_out).astype(np.int64)
+    hit = np.asarray(hit)
+    if (~hit).any():
+        out[~hit] = host_sample_level(g, seeds[~hit], fanout, rng,
+                                      rand=r[~hit])
+    return out, hit
+
+
+def cache_sample_batch(g: CSRGraph, cache, seeds: np.ndarray,
+                       fanouts: Sequence[int], rng: np.random.Generator
+                       ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+    """Cache-aware multi-hop sample (device backend of the batch pipeline).
+
+    Same contract as ``host_sample_batch`` plus per-level topology hit
+    masks (flattened frontier order) for traffic accounting.  With an
+    identically-seeded ``rng`` the returned levels are bit-identical to the
+    host sampler's.
+    """
+    levels = [np.asarray(seeds, dtype=np.int64)]
+    hits = []
+    frontier = levels[0]
+    shape = (len(frontier),)
+    for f in fanouts:
+        nxt, hit = cache_sample_level(g, cache, frontier.reshape(-1), f, rng)
+        hits.append(hit)
+        shape = shape + (f,)
+        levels.append(nxt.reshape(shape))
+        frontier = levels[-1]
+    return levels, hits
 
 
 def unique_vertices(levels: List[np.ndarray]) -> np.ndarray:

@@ -3,19 +3,28 @@
 TPU adaptation of Legion's CUDA zero-copy gather: indices are scalar-
 prefetched (SMEM) so each grid step's BlockSpec index_map selects the HBM row
 to DMA into VMEM — the classic embedding-gather pattern.  Misses (idx < 0)
-are zero-filled by the kernel (the pipeline overlays host-fetched rows).
+are zero-filled by the kernel and reported in an optional hit mask so the
+pipeline can overlay host-fetched rows.
 
-Grid: one step per `rows_per_block` output rows; the feature dim is tiled to
-the 128-lane boundary by the wrapper.
+Grid: (rows, feature tiles) — the feature dim is tiled to the 128-lane
+boundary.  Tables whose feature dim is not a multiple of the tile are padded
+per call (a fused copy under jit); hot-path callers should size caches to a
+lane multiple to skip it.
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128  # TPU vreg lane count: the natural feature-tile quantum
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def _gather_kernel(idx_ref, table_ref, out_ref):
@@ -26,22 +35,43 @@ def _gather_kernel(idx_ref, table_ref, out_ref):
 
 
 def gather_rows_pallas(table: jax.Array, idx: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
-    """out[i] = table[idx[i]] (0 for idx<0).  table (N, D), idx (B,)."""
+                       block_d: int = LANES,
+                       interpret: Optional[bool] = None,
+                       return_mask: bool = False,
+                       ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """``out[i] = table[idx[i]]`` (zeros where ``idx < 0``).
+
+    table: (N, D).  idx: any integer shape B...; the output is B... + (D,).
+    ``interpret=None`` auto-selects: interpret off TPU, compiled Mosaic on
+    TPU.  With ``return_mask=True`` also returns ``idx >= 0`` (the hit mask
+    the batch pipeline uses to overlay host-fetched miss rows).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
     N, D = table.shape
-    B = idx.shape[0]
+    batch_shape = idx.shape
+    idx_flat = idx.reshape(-1).astype(jnp.int32)
+    B = idx_flat.shape[0]
+    block_d = min(block_d, max(D, 1))
+    Dp = -(-D // block_d) * block_d  # round up to the tile boundary
+    if Dp != D:
+        table = jnp.pad(table, ((0, 0), (0, Dp - D)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B,),
+        grid=(B, Dp // block_d),
         in_specs=[
-            pl.BlockSpec((1, D), lambda i, idx: (jnp.maximum(idx[i], 0), 0)),
+            pl.BlockSpec((1, block_d),
+                         lambda i, j, idx: (jnp.maximum(idx[i], 0), j)),
         ],
-        out_specs=pl.BlockSpec((1, D), lambda i, idx: (i, 0)),
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, idx: (i, j)),
     )
     fn = pl.pallas_call(
         _gather_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Dp), table.dtype),
         interpret=interpret,
     )
-    return fn(idx.astype(jnp.int32), table)
+    out = fn(idx_flat, table)[:, :D].reshape(batch_shape + (D,))
+    if return_mask:
+        return out, idx >= 0
+    return out

@@ -17,13 +17,11 @@ from repro.kernels.gather import gather_rows_pallas
 from repro.kernels.sage_agg import sage_aggregate_pallas
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@partial(jax.jit, static_argnames=("interpret",))
-def gather_rows(table: jax.Array, idx: jax.Array, interpret: bool = True):
-    return gather_rows_pallas(table, idx, interpret=interpret)
+@partial(jax.jit, static_argnames=("interpret", "return_mask"))
+def gather_rows(table: jax.Array, idx: jax.Array, interpret: bool = None,
+                return_mask: bool = False):
+    return gather_rows_pallas(table, idx, interpret=interpret,
+                              return_mask=return_mask)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -1,0 +1,227 @@
+"""Batch builders: the host/device split of Legion's per-step pipeline.
+
+One training batch is produced in two phases with a hard boundary between
+them, so the Prefetcher thread and the consumer can overlap:
+
+  build_spec()   host thread (Prefetcher): seed shuffle, neighbor sampling,
+                 hit/miss split, miss-row fetch, traffic accounting.
+                 Produces a backend-agnostic ``BatchSpec`` (pure numpy).
+  finalize()     consumer thread: turns a spec into the jnp tensors the
+                 train step consumes.  For the device backend this is where
+                 the HBM-resident cache gather runs — JAX async dispatch
+                 overlaps it with the previous train step.
+
+Two interchangeable backends (paper §4.2/§5 vs the classic CPU pipeline)::
+
+    HostBatchBuilder                     DeviceBatchBuilder
+    ----------------                     ------------------
+    sample: host CSR (numpy)             sample: HBM topology cache on
+                                           device; host fills only the
+                                           topo-miss rows
+    gather: numpy rows, hits from        gather: Pallas gather over the
+      the host copy of the cache           HBM feat cache; host fetches
+                                           only the miss rows, overlaid
+                                           on device
+    finalize: one host->device copy      finalize: device gather + small
+      of the full batch                    miss overlay copy
+
+Both backends draw identical randomness (the device sampler replays the
+host generator's draws) and share one accounting implementation
+(``CliqueCache.account_feature_gather`` / ``sample_accounting``), so for a
+given seed they produce bit-identical batches and identical hit/miss
+counts — `tests/test_batch.py` pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.unified_cache import CliqueCache, TrafficCounter
+from repro.graph.csr import CSRGraph
+from repro.graph.sampling import (cache_sample_batch, host_sample_batch,
+                                  unique_vertices)
+
+BACKENDS = ("host", "device")
+
+
+@dataclasses.dataclass
+class BatchSpec:
+    """Backend-agnostic description of one sampled mini-batch (numpy only;
+    crosses the Prefetcher thread boundary)."""
+    labels: np.ndarray                  # (B,) int32
+    levels: List[np.ndarray]            # padded level id tensors, -1 = pad
+    ids: np.ndarray                     # unique non-negative vertex ids
+    level_pos: List[np.ndarray]         # per-level position into ``ids``
+    # host backend: fully materialized feature rows for ``ids``
+    host_feats: Optional[np.ndarray] = None
+    # device backend: hit/miss split + host-fetched miss rows
+    cache_pos: Optional[np.ndarray] = None   # feat-cache slot per id (-1 miss)
+    hit: Optional[np.ndarray] = None         # (len(ids),) bool
+    miss_feats: Optional[np.ndarray] = None  # (n_miss, D) f32
+
+
+def _level_positions(ids: np.ndarray, levels: List[np.ndarray]) -> List[np.ndarray]:
+    out = []
+    for lvl in levels:
+        pos = np.searchsorted(ids, np.maximum(lvl, 0))
+        out.append(np.clip(pos, 0, max(len(ids) - 1, 0)))
+    return out
+
+
+class BatchBuilder:
+    """Samples and extracts one device's mini-batches (see module doc)."""
+
+    backend: str = "?"
+
+    def __init__(self, g: CSRGraph, cache: Optional[CliqueCache],
+                 fanouts: Sequence[int],
+                 counter: Optional[TrafficCounter] = None, dev: int = 0):
+        self.g = g
+        self.cache = cache
+        self.fanouts = tuple(fanouts)
+        self.counter = counter
+        self.dev = dev
+
+    # -- phase 1: host thread --------------------------------------------
+    def build_spec(self, seeds: np.ndarray,
+                   rng: np.random.Generator) -> BatchSpec:
+        raise NotImplementedError
+
+    # -- phase 2: consumer thread ----------------------------------------
+    def finalize(self, spec: BatchSpec) -> Dict[str, "object"]:
+        raise NotImplementedError
+
+    def build(self, seeds: np.ndarray, rng: np.random.Generator) -> Dict:
+        """Convenience: both phases back to back (benchmarks, tests)."""
+        return self.finalize(self.build_spec(seeds, rng))
+
+    def _account_sampling(self, levels: List[np.ndarray]) -> None:
+        if self.counter is not None and self.cache is not None:
+            for lvl, f in zip(levels[:-1], self.fanouts):
+                self.cache.sample_accounting(lvl.reshape(-1), f,
+                                             self.counter, self.dev)
+
+
+class HostBatchBuilder(BatchBuilder):
+    """The classic CPU pipeline: everything numpy, one H2D copy per batch."""
+
+    backend = "host"
+
+    def build_spec(self, seeds, rng):
+        levels = host_sample_batch(self.g, seeds, self.fanouts, rng)
+        self._account_sampling(levels)
+        ids = unique_vertices(levels)
+        feats = (self.cache.extract_features(ids, self.dev, self.counter)
+                 if self.cache is not None else self.g.get_features(ids))
+        return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
+                         ids=ids, level_pos=_level_positions(ids, levels),
+                         host_feats=feats)
+
+    @staticmethod
+    def assemble(spec: BatchSpec) -> Dict[str, np.ndarray]:
+        """Spec -> padded numpy batch (the pre-copy host representation)."""
+        batch = {"labels": spec.labels}
+        for li, (lvl, pos) in enumerate(zip(spec.levels, spec.level_pos)):
+            f = spec.host_feats[pos]
+            f[lvl < 0] = 0.0
+            batch[f"feats_{li}"] = f
+            if li > 0:
+                batch[f"mask_{li}"] = lvl >= 0
+        return batch
+
+    def finalize(self, spec):
+        import jax.numpy as jnp
+
+        return {k: jnp.asarray(v) for k, v in self.assemble(spec).items()}
+
+
+class DeviceBatchBuilder(BatchBuilder):
+    """Device-resident pipeline: sampling and feature gather run against the
+    HBM-resident unified cache; the host only fills misses.
+
+    ``gather`` picks the cached-row gather implementation:
+      * ``"pallas"`` — the Mosaic kernel (`gather_rows_pallas`); compiled on
+        TPU, interpreted elsewhere (slow off-TPU, but the real hot path).
+      * ``"xla"``    — the jnp oracle with identical semantics.
+      * ``"auto"``   — pallas on TPU, xla otherwise (default).
+    """
+
+    backend = "device"
+
+    def __init__(self, g, cache, fanouts, counter=None, dev=0,
+                 gather: str = "auto"):
+        if cache is None:
+            raise ValueError("DeviceBatchBuilder needs a unified cache "
+                             "(build a LegionPlan, or use backend='host')")
+        super().__init__(g, cache, fanouts, counter, dev)
+        if gather not in ("auto", "pallas", "xla"):
+            raise ValueError(f"unknown gather impl {gather!r}")
+        if gather == "auto":
+            import jax
+            gather = "pallas" if jax.default_backend() == "tpu" else "xla"
+        self.gather = gather
+
+    def build_spec(self, seeds, rng):
+        levels, _topo_hits = cache_sample_batch(self.g, self.cache, seeds,
+                                                self.fanouts, rng)
+        self._account_sampling(levels)
+        ids = unique_vertices(levels)
+        cache_pos, hit = self.cache.split_hits(ids)
+        if self.counter is not None:
+            self.cache.account_feature_gather(cache_pos, hit, self.dev,
+                                              self.counter)
+        miss_feats = (self.g.get_features(ids[~hit]) if (~hit).any()
+                      else np.zeros((0, self.g.feat_dim), np.float32))
+        return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
+                         ids=ids, level_pos=_level_positions(ids, levels),
+                         cache_pos=cache_pos, hit=hit, miss_feats=miss_feats)
+
+    def _gather_cached(self, idx: np.ndarray):
+        """(n_ids,) slot ids (-1 = miss) -> (n_ids, D) rows, zeros at -1."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops, ref
+
+        D = self.g.feat_dim
+        if len(self.cache.feat_ids) == 0:
+            return jnp.zeros((len(idx), D), jnp.float32)
+        table = self.cache.device_arrays()["feat_cache"]  # lane-padded
+        jidx = jnp.asarray(idx, jnp.int32)
+        out = (ops.gather_rows(table, jidx) if self.gather == "pallas"
+               else ref.gather_rows(table, jidx))
+        return out[:, :D] if table.shape[1] != D else out
+
+    def finalize(self, spec):
+        import jax.numpy as jnp
+
+        idx = np.where(spec.hit, spec.cache_pos, -1)
+        feats = self._gather_cached(idx)
+        miss_rows = np.flatnonzero(~spec.hit)
+        if len(miss_rows):
+            feats = feats.at[jnp.asarray(miss_rows)].set(
+                jnp.asarray(spec.miss_feats))
+        batch = {"labels": jnp.asarray(spec.labels)}
+        for li, (lvl, pos) in enumerate(zip(spec.levels, spec.level_pos)):
+            f = jnp.take(feats, jnp.asarray(pos.reshape(-1)), axis=0)
+            f = f.reshape(lvl.shape + (self.g.feat_dim,))
+            valid = jnp.asarray(lvl >= 0)
+            f = f * valid[..., None].astype(f.dtype)
+            batch[f"feats_{li}"] = f
+            if li > 0:
+                batch[f"mask_{li}"] = valid
+        return batch
+
+
+def make_batch_builder(backend: str, g: CSRGraph,
+                       cache: Optional[CliqueCache],
+                       fanouts: Sequence[int],
+                       counter: Optional[TrafficCounter] = None,
+                       dev: int = 0, **kw) -> BatchBuilder:
+    if backend == "host":
+        return HostBatchBuilder(g, cache, fanouts, counter, dev, **kw)
+    if backend == "device":
+        return DeviceBatchBuilder(g, cache, fanouts, counter, dev, **kw)
+    raise ValueError(f"unknown batch backend {backend!r} (expected one of "
+                     f"{BACKENDS})")

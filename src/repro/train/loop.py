@@ -28,9 +28,9 @@ import numpy as np
 from repro.core.planner import LegionPlan
 from repro.core.unified_cache import TrafficCounter
 from repro.graph.csr import CSRGraph
-from repro.graph.sampling import host_sample_batch, unique_vertices
 from repro.models.gnn import GNNConfig, defs as gnn_defs, loss_fn as gnn_loss
 from repro.models.params import init_from_defs
+from repro.train.batch import HostBatchBuilder, make_batch_builder
 from repro.train.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
 from repro.train.optimizer import adamw, apply_updates
 from repro.train.pipeline import Prefetcher, StragglerMonitor
@@ -39,24 +39,11 @@ from repro.train.pipeline import Prefetcher, StragglerMonitor
 def make_gnn_batch(g: CSRGraph, cache, cfg: GNNConfig, seeds: np.ndarray,
                    rng: np.random.Generator, counter: Optional[TrafficCounter],
                    dev: int) -> dict:
-    """Sample + extract one padded mini-batch, with traffic accounting."""
-    levels = host_sample_batch(g, seeds, cfg.fanouts, rng)
-    if counter is not None:
-        for l, f in zip(levels[:-1], cfg.fanouts):
-            cache.sample_accounting(l.reshape(-1), f, counter, dev)
-    ids = unique_vertices(levels)
-    feats = cache.extract_features(ids, dev, counter) if cache is not None \
-        else g.get_features(ids)
-    batch = {"labels": g.get_labels(seeds)}
-    for li, lvl in enumerate(levels):
-        pos = np.searchsorted(ids, np.maximum(lvl, 0))
-        pos = np.clip(pos, 0, len(ids) - 1)
-        f = feats[pos]
-        f[lvl < 0] = 0.0
-        batch[f"feats_{li}"] = f
-        if li > 0:
-            batch[f"mask_{li}"] = (lvl >= 0)
-    return batch
+    """Sample + extract one padded mini-batch, with traffic accounting.
+
+    Back-compat shim over ``HostBatchBuilder`` (returns numpy, not jnp)."""
+    builder = HostBatchBuilder(g, cache, cfg.fanouts, counter, dev)
+    return builder.assemble(builder.build_spec(seeds, rng))
 
 
 @dataclasses.dataclass
@@ -67,6 +54,8 @@ class GNNTrainResult:
     counter: TrafficCounter
     straggler: dict
     steps: int
+    backend: str = "host"
+    pipeline: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -75,9 +64,16 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               checkpoint_dir: Optional[str] = None, checkpoint_every: int = 50,
               resume: bool = False, prefetch_depth: int = 2,
               shuffle: str = "local", mesh=None,
-              compress_grads: bool = False) -> GNNTrainResult:
+              compress_grads: bool = False, backend: str = "host",
+              gather: str = "auto") -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
     tablets and draws seeds from the full training set (the Fig. 11 baseline).
+
+    ``backend`` selects the batch pipeline (see repro.train.batch):
+    ``"host"`` is the classic CPU path; ``"device"`` samples and gathers
+    against the HBM-resident unified cache (``gather`` picks the cached-row
+    gather impl: auto|pallas|xla) with the host filling only misses, and
+    overlaps the device-side gather with the previous train step.
 
     With ``mesh`` (a jax Mesh with a "data" axis) the step runs as explicit
     shard_map data parallelism; ``compress_grads=True`` additionally swaps
@@ -88,7 +84,7 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         devices = sorted(plan.partition.tablets) if plan is not None else [0]
     n_dev = len(devices)
     per_dev = max(cfg.batch_size // max(n_dev, 1), 16)
-    counter = counter if counter is not None else TrafficCounter(n_devices=max(devices) + 1 if devices else 1)
+    counter = counter if counter is not None else TrafficCounter.for_devices(devices)
 
     key = jax.random.PRNGKey(seed)
     params = init_from_defs(gnn_defs(cfg), key)
@@ -144,26 +140,48 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                   else all_train)
         streams[d] = tablet
 
-    def batch_fn(step: int) -> dict:
-        """One *synchronized* step: per-device batches concatenated (==DP)."""
-        parts = []
+    # the device backend needs a unified cache; planless runs degrade to
+    # the host pipeline (nothing device-resident to gather from) and the
+    # result reports the backend that actually ran
+    backend = backend if plan is not None else "host"
+    builders = {}
+    for d in devices:
+        cache = plan.cache_for_device(d) if plan is not None else None
+        kw = {"gather": gather} if backend == "device" else {}
+        builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
+                                         counter, d, **kw)
+
+    def spec_fn(step: int) -> list:
+        """Host phase of one *synchronized* step: per-device batch specs."""
+        out = []
         for d in devices:
             rng = rngs[d]
             tablet = streams[d]
             seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
-            cache = plan.cache_for_device(d) if plan is not None else None
-            parts.append(make_gnn_batch(g, cache, cfg, seeds, rng, counter, d))
-        return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+            out.append(builders[d].build_spec(seeds, rng))
+        return out
 
-    prefetcher = Prefetcher(batch_fn, depth=prefetch_depth)
+    def finalize_batch(specs: list) -> dict:
+        """Device phase: finalize every part and concatenate (==DP).  Runs
+        on the consumer thread; with the device backend the cache gather is
+        dispatched asynchronously and overlaps the in-flight train step."""
+        parts = [builders[d].finalize(s) for d, s in zip(devices, specs)]
+        if len(parts) == 1:
+            return parts[0]
+        return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+    prefetcher = Prefetcher(spec_fn, depth=prefetch_depth,
+                            limit=max(steps - step0, 0))
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
     t_epoch = time.perf_counter()
     try:
+        next_batch = (finalize_batch(prefetcher.get())
+                      if steps > step0 else None)
         for step in range(step0, steps):
             t0 = time.perf_counter()
-            batch = {k: jnp.asarray(v) for k, v in prefetcher.get().items()}
+            batch = next_batch
             if ef_state is not None:
                 params, opt_state, ef_state, loss = train_step(
                     params, opt_state, ef_state, batch)
@@ -171,6 +189,11 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             else:
                 params, opt_state, loss, acc = train_step_plain(
                     params, opt_state, batch)
+            # build batch i+1 while the device chews on step i: the host
+            # phase comes off the prefetch queue, and finalize's device
+            # gather rides the same async dispatch stream as the step.
+            next_batch = (finalize_batch(prefetcher.get())
+                          if step + 1 < steps else None)
             loss.block_until_ready()
             monitor.record(time.perf_counter() - t0)
             losses.append(float(loss))
@@ -187,4 +210,5 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             ckpt.close()
     return GNNTrainResult(losses=losses, accs=accs, epoch_times=epoch_times,
                           counter=counter, straggler=monitor.summary(),
-                          steps=steps - step0)
+                          steps=steps - step0, backend=backend,
+                          pipeline=prefetcher.summary())

@@ -1,9 +1,13 @@
 """Fine-grained training pipeline (paper §5) + straggler mitigation.
 
 * ``Prefetcher``: background thread running the sampling server (batch
-  generation + neighbor sampling + feature extraction against the unified
-  cache) while the device trains batch i — the inter-batch pipeline of
-  Figure 7.  JAX's async dispatch supplies the device-side overlap.
+  generation + neighbor sampling + the host phase of feature extraction)
+  while the device trains batch i — the inter-batch pipeline of Figure 7.
+  It is backend-agnostic: ``batch_fn`` returns whatever the consumer's
+  ``BatchBuilder.finalize`` accepts (numpy ``BatchSpec`` lists in the train
+  loop), so host-side work queues up while device-side work (cache gather,
+  train step) rides JAX's async dispatch.  Per-batch host build times are
+  tracked for the pipeline-efficiency benchmarks (``summary()``).
 * ``StragglerMonitor``: EWMA step-time tracker flagging outlier steps; at
   fleet scale its per-host summaries feed backup-task dispatch — here it
   drives logging and the queue-depth guard.
@@ -17,11 +21,20 @@ from typing import Callable, Iterator, Optional
 
 
 class Prefetcher:
-    def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2):
+    def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2,
+                 limit: Optional[int] = None):
+        """``limit`` bounds the total number of batches produced (the train
+        loop passes its step count): without it the worker keeps building
+        ahead until close(), so side effects in ``batch_fn`` — notably
+        traffic accounting — would include a timing-dependent tail of
+        batches nobody consumes."""
         self._batch_fn = batch_fn
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = 0
+        self._limit = limit
+        self._build_s = 0.0
+        self._built = 0
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._exc: Optional[BaseException] = None
         self._thread.start()
@@ -29,7 +42,12 @@ class Prefetcher:
     def _worker(self):
         try:
             while not self._stop.is_set():
+                if self._limit is not None and self._step >= self._limit:
+                    return
+                t0 = time.perf_counter()
                 batch = self._batch_fn(self._step)
+                self._build_s += time.perf_counter() - t0
+                self._built += 1
                 self._step += 1
                 while not self._stop.is_set():
                     try:
@@ -44,6 +62,13 @@ class Prefetcher:
         if self._exc is not None:
             raise self._exc
         return self._q.get(timeout=timeout)
+
+    def summary(self) -> dict:
+        """Host-phase build stats (what the device would stall on if the
+        queue ran dry)."""
+        return {"batches_built": self._built,
+                "host_build_s_total": self._build_s,
+                "host_build_s_mean": self._build_s / max(self._built, 1)}
 
     def close(self):
         self._stop.set()

@@ -1,0 +1,74 @@
+"""Minimal stand-in for ``hypothesis`` when the optional dep is absent.
+
+The property tests in this suite only use ``@settings(...) @given(
+st.integers(a, b), st.floats(a, b))``.  This shim replays each test with a
+small deterministic sample of the strategy space (endpoints + evenly spaced
+interior points) so the invariants still execute without hypothesis
+installed.  With hypothesis available, tests import the real thing instead
+(see the try/except in each test module).
+"""
+from __future__ import annotations
+
+import inspect
+
+_N_EXAMPLES = 8  # per strategy axis before taking the cartesian product cap
+_MAX_CASES = 25  # total replayed cases per test
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value) -> _Strategy:
+        span = max_value - min_value
+        if span < _N_EXAMPLES:
+            return _Strategy(range(min_value, max_value + 1))
+        step = max(span // (_N_EXAMPLES - 1), 1)
+        pts = sorted({min_value, max_value,
+                      *range(min_value, max_value + 1, step)})
+        return _Strategy(pts)
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw) -> _Strategy:
+        span = max_value - min_value
+        pts = [min_value + span * i / (_N_EXAMPLES - 1)
+               for i in range(_N_EXAMPLES)]
+        return _Strategy(pts)
+
+
+def _cases(strats):
+    """Deterministic case list: all-min, all-max, then strided diagonals so
+    every axis cycles through all of its examples."""
+    seen = []
+    seen.append(tuple(s.examples[0] for s in strats))
+    seen.append(tuple(s.examples[-1] for s in strats))
+    for i in range(_MAX_CASES - 2):
+        case = tuple(s.examples[(i * (j + 1) + j) % len(s.examples)]
+                     for j, s in enumerate(strats))
+        if case not in seen:
+            seen.append(case)
+    return seen
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            for case in _cases(strats):
+                fn(*args, *case, **kwargs)
+        # Expose only leading non-strategy params (hypothesis fills the
+        # trailing ones) so pytest doesn't treat them as fixtures.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[: len(params) - len(strats)])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    return lambda fn: fn

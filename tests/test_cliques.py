@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback replays
+    from _hyp_compat import given, settings, strategies as st
 
 from repro.core.cliques import clique_cover, max_clique, topology_matrix
 

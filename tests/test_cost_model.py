@@ -1,7 +1,10 @@
 """Cost model (Eq. 2-6): monotonicity, optimality of the sweep, knapsack wins."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback replays
+    from _hyp_compat import given, settings, strategies as st
 
 from repro.core.cost_model import CliqueCostModel
 from repro.core.cslp import cslp

@@ -1,6 +1,9 @@
 """Algorithm 1 (CSLP) invariants, property-based."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback replays
+    from _hyp_compat import given, settings, strategies as st
 
 from repro.core.cslp import cslp
 

@@ -18,6 +18,41 @@ def test_gather_matches_ref(N, D, B, dtype):
         np.asarray(ref.gather_rows(table, idx), np.float32), rtol=1e-6)
 
 
+@pytest.mark.parametrize("N,D,B", [(50, 100, 17), (64, 130, 9), (20, 1, 3),
+                                   (64, 384, 16)])
+def test_gather_nonlane_feature_dim(N, D, B):
+    """Tiling contract: D not a multiple of 128 is padded internally and the
+    output is sliced back — results identical to jnp.take."""
+    key = jax.random.PRNGKey(5)
+    table = jax.random.normal(key, (N, D))
+    idx = jnp.asarray(np.random.default_rng(2).integers(-3, N, size=B), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.gather_rows(table, idx)),
+        np.asarray(ref.gather_rows(table, idx)))
+
+
+def test_gather_negative_indices_zero_and_mask():
+    table = jnp.arange(12.0).reshape(4, 3) + 1.0  # no zero rows
+    idx = jnp.asarray([2, -1, 0, -7, 3], jnp.int32)
+    out, mask = ops.gather_rows(table, idx, return_mask=True)
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, True, False, True])
+    assert (np.asarray(out)[~np.asarray(mask)] == 0).all()
+    np.testing.assert_array_equal(np.asarray(out)[np.asarray(mask)],
+                                  np.asarray(table)[[2, 0, 3]])
+
+
+def test_gather_batched_index_shape():
+    """idx may be multi-dim (B, F): output is (B, F, D)."""
+    key = jax.random.PRNGKey(6)
+    table = jax.random.normal(key, (32, 128))
+    idx = jnp.asarray(np.random.default_rng(3).integers(-1, 32, size=(7, 5)),
+                      jnp.int32)
+    out = ops.gather_rows(table, idx)
+    assert out.shape == (7, 5, 128)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.gather_rows(table, idx.reshape(-1))).reshape(7, 5, 128))
+
+
 @pytest.mark.parametrize("N,D,B,F", [(64, 128, 8, 5), (128, 256, 16, 10),
                                      (32, 128, 4, 25)])
 def test_sage_aggregate_matches_ref(N, D, B, F):

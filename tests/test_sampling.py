@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback replays
+    from _hyp_compat import given, settings, strategies as st
 
 from repro.graph.csr import powerlaw_graph
 from repro.graph.sampling import (device_sample, host_sample_batch,
