@@ -38,10 +38,28 @@ FANOUTS = (25, 10)
 # (or REPRO_BATCH_BACKEND) flips every train_gnn call to the device path.
 BATCH_BACKEND = os.environ.get("REPRO_BATCH_BACKEND", "host")
 
+# --smoke shrinks benchmark instances to CI scale (set by run.py)
+SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+
 
 def default_graph(n: int = 40_000, seed: int = 0, feat_dim: int = 100) -> CSRGraph:
     """Products-profile stand-in (avg degree 50, power-law)."""
     return powerlaw_graph(n, 50, seed=seed, feat_dim=feat_dim)
+
+
+def two_community_graph(n_half: int, avg_degree: int, seed: int = 0,
+                        feat_dim: int = 32) -> CSRGraph:
+    """Two disjoint power-law communities in one CSR graph — the
+    drifting-workload instance: training seeds that migrate from community
+    A to community B touch a completely different hot set, so a static
+    cache plan built for A decays to zero hit rate on B."""
+    a = powerlaw_graph(n_half, avg_degree, seed=seed, feat_dim=feat_dim)
+    b = powerlaw_graph(n_half, avg_degree, seed=seed + 1, feat_dim=feat_dim)
+    indptr = np.concatenate([a.indptr, a.indptr[-1] + b.indptr[1:]])
+    indices = np.concatenate([a.indices,
+                              (b.indices + n_half).astype(np.int32)])
+    return CSRGraph(indptr=indptr, indices=indices, n=2 * n_half,
+                    feat_dim=feat_dim, seed=seed)
 
 
 @dataclasses.dataclass

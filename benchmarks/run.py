@@ -29,11 +29,21 @@ def main() -> None:
                     help="batch pipeline for the training benchmarks")
     ap.add_argument("--only", default="",
                     help="run only benchmarks whose name contains this")
+    ap.add_argument("--bench", default="",
+                    help="run exactly one benchmark by name (see ALL_BENCHES)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: shrink benchmark instances")
     args = ap.parse_args()
     common.BATCH_BACKEND = args.backend
+    common.SMOKE = common.SMOKE or args.smoke
+    if args.bench and args.bench not in {n for n, _ in ALL_BENCHES}:
+        raise SystemExit(f"unknown benchmark {args.bench!r}; choose from "
+                         f"{sorted(n for n, _ in ALL_BENCHES)}")
 
     print("name,us_per_call,derived")
     for name, fn in ALL_BENCHES:
+        if args.bench and name != args.bench:
+            continue
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()

@@ -25,6 +25,9 @@ ap.add_argument("--ckpt", default="/tmp/legion_sage_ckpt")
 ap.add_argument("--backend", choices=["host", "device"], default="host",
                 help="batch pipeline: host numpy path, or device-resident "
                      "cache sampling + Pallas feature gather")
+ap.add_argument("--refresh-interval", type=int, default=None,
+                help="enable the online cache manager: drift check + "
+                     "adaptive cache refresh every N steps")
 args = ap.parse_args()
 
 if args.full:
@@ -40,7 +43,8 @@ n_params = 128 * hidden * 2 + hidden * hidden * 2 + hidden * 32
 print(f"training SAGE hidden={hidden} (~{n_params/1e6:.1f}M params) "
       f"for {steps} steps")
 res = train_gnn(g, plan, cfg, steps=steps, checkpoint_dir=args.ckpt,
-                checkpoint_every=50, backend=args.backend)
+                checkpoint_every=50, backend=args.backend,
+                refresh_interval=args.refresh_interval)
 print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}   "
       f"final acc {res.accs[-1]:.3f}")
 print(f"backend {res.backend}  host build "
@@ -49,3 +53,8 @@ print(f"feature hit {res.counter.feature_hit_rate:.1%}  "
       f"topo hit {res.counter.topo_hit_rate:.1%}  "
       f"PCIe tx {res.counter.pcie_transactions}")
 print("straggler:", res.straggler)
+if res.refresh:
+    print(f"cache refresh: {res.refresh['checks']} checks, "
+          f"{res.refresh['refreshes']} refreshes, "
+          f"{res.refresh['admitted']} rows admitted "
+          f"({res.refresh['refresh_bytes_h2d']} H2D bytes)")

@@ -22,7 +22,8 @@ from repro.core.cost_model import CliqueCostModel
 from repro.core.cslp import CSLPResult, cslp
 from repro.core.hotness import HotnessStats, presample_clique
 from repro.core.partition import PartitionPlan, hierarchical_partition
-from repro.core.unified_cache import CliqueCache, build_clique_cache
+from repro.core.unified_cache import (CliqueCache, build_clique_cache,
+                                      plan_cache_contents)
 from repro.graph.csr import CSRGraph
 
 
@@ -85,15 +86,43 @@ def build_plan(g: CSRGraph, topo_matrix: np.ndarray, mem_per_device: float,
                       mem_per_device=mem_per_device, timings=timings)
 
 
+def replan_cache_from_hotness(g: CSRGraph, plan: LegionPlan, clique_idx: int,
+                              stats: HotnessStats,
+                              planner: str = "alpha_sweep"):
+    """Incremental delta-plan for one clique from *blended* (pre-sampled +
+    observed) hotness: re-run CSLP and the cost model under the unchanged
+    memory budget and return the target residency sets — without building a
+    fresh CliqueCache, so the online cache manager can diff them against
+    current residency and apply admissions/evictions in place.
+
+    Returns (cslp_res, cost_plan, feat_ids_per_dev, topo_ids_per_dev).
+    This is the same machinery ``replan_on_topology_change`` runs per
+    clique, minus partition/tablet surgery (the device layout is stable).
+    """
+    devices = plan.partition.cliques[clique_idx]
+    res = cslp(stats.H_T, stats.H_F)
+    cm = CliqueCostModel.build(g, res, stats.N_TSUM)
+    B = plan.mem_per_device * len(devices)
+    cost_plan = cm.plan_knapsack(B) if planner == "knapsack" else cm.plan(B)
+    cost_plan["cost_model"] = cm
+    feat_ids, topo_ids = plan_cache_contents(g, len(devices), res, cost_plan,
+                                             plan.mem_per_device)
+    return res, cost_plan, feat_ids, topo_ids
+
+
 def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
                               new_topo: np.ndarray,
                               alive: Optional[Sequence[int]] = None,
-                              planner: str = "alpha_sweep") -> LegionPlan:
+                              planner: str = "alpha_sweep",
+                              mem_per_device: Optional[float] = None) -> LegionPlan:
     """Elastic replan after device failure / reservation change.
 
     Reuses per-device hotness rows from the old plan (hotness is a property
     of the sampled workload, not of the device layout); dead devices'
-    tablets and hotness merge into their clique survivors.
+    tablets and hotness merge into their clique survivors.  An optional
+    ``mem_per_device`` override re-plans under a grown or shrunk budget
+    (growth re-admits previously evicted vertices; the cache fill orders
+    are hotness-sorted, so the old contents are a prefix of the new).
     """
     from repro.core.cliques import clique_cover
 
@@ -124,6 +153,7 @@ def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
         rows_T[tgt] = rows_T[tgt] + rows_T[d]
         rows_F[tgt] = rows_F[tgt] + rows_F[d]
 
+    mem = old.mem_per_device if mem_per_device is None else mem_per_device
     stats, cslps, plans, caches = [], [], [], []
     scale = old.stats[0].N_TSUM / max(sum(len(c) for c in old.partition.cliques), 1)
     for devices in new_cliques:
@@ -135,11 +165,10 @@ def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
         res = cslp(H_T, H_F)
         cslps.append(res)
         cm = CliqueCostModel.build(g, res, st.N_TSUM)
-        B = old.mem_per_device * len(devices)
+        B = mem * len(devices)
         plan = cm.plan_knapsack(B) if planner == "knapsack" else cm.plan(B)
         plans.append(plan)
-        caches.append(build_clique_cache(g, devices, res, plan,
-                                         old.mem_per_device))
+        caches.append(build_clique_cache(g, devices, res, plan, mem))
 
     part = PartitionPlan(cliques=new_cliques,
                          vertex_part=old.partition.vertex_part,
@@ -147,5 +176,5 @@ def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
                          train_vertices=old.partition.train_vertices)
     return LegionPlan(partition=part, stats=stats, cslp=cslps,
                       cost_plans=plans, caches=caches,
-                      mem_per_device=old.mem_per_device,
+                      mem_per_device=mem,
                       timings={"replan": True})

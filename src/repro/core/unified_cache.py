@@ -90,16 +90,32 @@ class CliqueCache:
         self.feat_owner = (np.concatenate(owners) if owners
                            else np.zeros(0, np.int32))
         self.feat_pos[self.feat_ids] = np.arange(len(self.feat_ids))
+        self._materialized = materialize
+        if materialize:
+            self.feat_cache = g.get_features(self.feat_ids) if len(self.feat_ids) else np.zeros((0, g.feat_dim), np.float32)
+        else:
+            self.feat_cache = None
         # ---- topology cache (CSR subset) ----
-        tids = (np.concatenate(topo_ids_per_dev) if topo_ids_per_dev
-                else np.zeros(0, np.int64)).astype(np.int64)
+        self._build_topology(topo_ids_per_dev)
+        # device residency is double-buffered across refresh epochs: the
+        # previous epoch's arrays stay alive until the epoch after next so
+        # in-flight batch specs keep gathering from the buffer they indexed
+        self.epoch = 0
+        self._device_arrays = None
+        self._prev_device_arrays = None
+        self._prev_epoch = -1
+
+    def _build_topology(self, topo_ids_per_dev: Sequence[np.ndarray]) -> None:
+        """(Re)build the CSR-subset topology cache from per-device id lists."""
+        g = self.g
+        tids = (np.concatenate([np.asarray(t) for t in topo_ids_per_dev])
+                if len(topo_ids_per_dev) else np.zeros(0, np.int64)).astype(np.int64)
         self.topo_ids = tids
         self.topo_pos = np.full(g.n, -1, dtype=np.int64)
         self.topo_pos[tids] = np.arange(len(tids))
         deg = (g.indptr[tids + 1] - g.indptr[tids]) if len(tids) else np.zeros(0, np.int64)
         self.cache_indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
-        if materialize:
-            self.feat_cache = g.get_features(self.feat_ids) if len(self.feat_ids) else np.zeros((0, g.feat_dim), np.float32)
+        if self._materialized:
             # vectorized adjacency copy: slot k of the cache CSR maps to
             # g.indices[indptr[tids[row]] + (k - cache_indptr[row])]
             if len(tids):
@@ -112,18 +128,22 @@ class CliqueCache:
             else:
                 self.cache_indices = np.zeros(0, np.int32)
         else:
-            self.feat_cache = None
             self.cache_indices = None
-        self._device_arrays = None
 
     # ---- device residency ----
-    def device_arrays(self):
+    def device_arrays(self, epoch: Optional[int] = None):
         """jnp copies (lazy): the HBM-resident cache halves.
 
         ``feat_cache`` columns are padded once to the 128-lane boundary
         (only when feat_dim exceeds one lane tile) so the per-batch Pallas
         gather never re-pads the whole table; gather consumers slice back
-        to ``g.feat_dim``."""
+        to ``g.feat_dim``.
+
+        ``epoch`` pins a refresh generation: batch specs built before an
+        online cache refresh finalize against the buffer they indexed (the
+        double buffer retains exactly one previous epoch — refresh
+        intervals must exceed the prefetch depth, which the manager
+        enforces)."""
         if self._device_arrays is None:
             import jax.numpy as jnp
 
@@ -131,14 +151,144 @@ class CliqueCache:
             D = fc.shape[1]
             if D > 128 and D % 128:
                 fc = np.pad(fc, ((0, 0), (0, 128 - D % 128)))
+            # feat_cache / feat_pos MUST be copies: on the CPU backend
+            # jnp.asarray zero-copy aliases aligned numpy buffers, and
+            # apply_feature_delta mutates those host mirrors in place —
+            # an aliased "retained" epoch would be silently rewritten.
+            # The topology arrays are replaced wholesale (never mutated),
+            # so aliasing them is safe.
             self._device_arrays = {
-                "feat_cache": jnp.asarray(fc),
-                "feat_pos": jnp.asarray(self.feat_pos),
+                "feat_cache": jnp.array(fc),
+                "feat_pos": jnp.array(self.feat_pos),
                 "cache_indptr": jnp.asarray(self.cache_indptr),
                 "cache_indices": jnp.asarray(self.cache_indices),
                 "topo_pos": jnp.asarray(self.topo_pos),
             }
-        return self._device_arrays
+        if epoch is None or epoch == self.epoch:
+            return self._device_arrays
+        if epoch == self._prev_epoch and self._prev_device_arrays is not None:
+            return self._prev_device_arrays
+        raise RuntimeError(
+            f"cache epoch {epoch} is no longer resident (current "
+            f"{self.epoch}, retained {self._prev_epoch}); refresh_interval "
+            "must be larger than the prefetch depth")
+
+    # ---- online refresh (cache manager API) ----
+    def begin_epoch(self) -> int:
+        """Rotate the device double buffer: the current arrays become the
+        retained previous epoch; subsequent mutations build the new one.
+        Returns the new epoch id.
+
+        If the device arrays were never materialized (host-backend
+        training) there is nothing to retain and nothing that can pin the
+        outgoing epoch: host reads go through the numpy mirrors and are
+        serialized with refreshes on the prefetch worker, while any device
+        spec build would have materialized the arrays already.  The
+        rotation then only bumps the epoch id."""
+        self._prev_device_arrays = self._device_arrays
+        self._prev_epoch = self.epoch if self._device_arrays is not None else -1
+        self.epoch += 1
+        return self.epoch
+
+    def apply_feature_delta(self, evict_ids: np.ndarray,
+                            admit_ids: np.ndarray,
+                            admit_owner: np.ndarray,
+                            admit_rows: Optional[np.ndarray] = None,
+                            scatter: str = "auto") -> dict:
+        """Evict ``evict_ids`` from the feature cache and write the admitted
+        rows into the freed slots (slot reuse — no reallocation, no change
+        to cache capacity).
+
+        admit_owner: per admitted id, the owning device's *clique-local*
+        index (CSLP local preference).  admit_rows defaults to a host fetch
+        of the admitted ids.  If fewer slots are freed than ids admitted,
+        the admission list is truncated (capacity is fixed); surplus freed
+        slots become empty (-1 in ``feat_ids``).
+
+        Device side: a Pallas scatter writes the admitted rows into a *new*
+        table buffer (``scatter='pallas'|'xla'|'auto'``), leaving the
+        previous epoch's buffer untouched for in-flight batches.  Call
+        ``begin_epoch`` first.
+
+        Returns {"evicted": n, "admitted": n, "bytes_h2d": host->device
+        admission traffic}.
+        """
+        evict_ids = np.asarray(evict_ids, dtype=np.int64)
+        admit_ids = np.asarray(admit_ids, dtype=np.int64)
+        slots = self.feat_pos[evict_ids]
+        if (slots < 0).any():
+            raise ValueError("apply_feature_delta: evict_ids contain "
+                             "vertices that are not cached")
+        self.feat_pos[evict_ids] = -1
+        self.feat_ids[slots] = -1
+        # reuse every empty slot (just-freed + leftovers of past refreshes)
+        free = np.flatnonzero(self.feat_ids < 0)
+        n_admit = min(len(admit_ids), len(free))
+        admit_ids = admit_ids[:n_admit]
+        admit_owner = np.asarray(admit_owner, dtype=np.int32)[:n_admit]
+        use = free[:n_admit]
+        # host-side slot maps
+        self.feat_pos[admit_ids] = use
+        self.feat_ids[use] = admit_ids
+        self.feat_owner[use] = admit_owner
+        if admit_rows is None:
+            admit_rows = (self.g.get_features(admit_ids) if n_admit
+                          else np.zeros((0, self.g.feat_dim), np.float32))
+        admit_rows = np.asarray(admit_rows, dtype=np.float32)[:n_admit]
+        if self.feat_cache is not None and n_admit:
+            self.feat_cache[use] = admit_rows
+        # device side: double-buffered scatter into the freed slots
+        if self._device_arrays is not None:
+            import jax.numpy as jnp
+
+            from repro.kernels import ops, ref
+
+            old = self._device_arrays
+            table = old["feat_cache"]
+            Dp = table.shape[1]
+            rows = admit_rows
+            if rows.shape[0] and Dp != rows.shape[1]:
+                rows = np.pad(rows, ((0, 0), (0, Dp - rows.shape[1])))
+            jidx = jnp.asarray(use, jnp.int32)
+            jrows = jnp.asarray(rows)
+            if scatter == "auto":
+                import jax
+                scatter = ("pallas" if jax.default_backend() == "tpu"
+                           else "xla")
+            new_table = (ops.scatter_rows(table, jidx, jrows)
+                         if scatter == "pallas"
+                         else ref.scatter_rows(table, jidx, jrows))
+            new = dict(old)
+            new["feat_cache"] = new_table
+            new["feat_pos"] = jnp.array(self.feat_pos)  # copy: mirror mutates
+            self._device_arrays = new
+        return {"evicted": int(len(evict_ids)), "admitted": int(n_admit),
+                "bytes_h2d": int(n_admit) * self.g.feat_dim * S_FLOAT32}
+
+    def replace_topology(self, topo_ids_per_dev: Sequence[np.ndarray]) -> None:
+        """Swap the topology half of the cache for a new planned id set.
+
+        Topology is only read at spec-build time (on the prefetch worker,
+        serialized with refreshes), never at finalize time, so a full
+        rebuild — unlike the feature table — needs no epoch retention; the
+        rebuilt arrays simply join the current epoch's dict."""
+        self._build_topology(topo_ids_per_dev)
+        if self._device_arrays is not None:
+            import jax.numpy as jnp
+
+            new = dict(self._device_arrays)
+            new["cache_indptr"] = jnp.asarray(self.cache_indptr)
+            new["cache_indices"] = jnp.asarray(self.cache_indices)
+            new["topo_pos"] = jnp.asarray(self.topo_pos)
+            self._device_arrays = new
+
+    def feat_ids_by_device(self) -> List[np.ndarray]:
+        """Current per-device cached feature ids (clique-local order) —
+        the cache manager's view of residency for delta planning.  Empty
+        slots (evicted, not yet re-admitted) are skipped."""
+        live = self.feat_ids >= 0
+        return [self.feat_ids[live & (self.feat_owner == gi)]
+                for gi in range(len(self.devices))]
 
     def device_sample_cached(self, seeds, fanout: int, key=None, *,
                              rand=None):
@@ -253,10 +403,11 @@ class CliqueCache:
             counter.bytes_matrix[requester_dev, -1] += int((deg * S_UINT32).sum())
 
 
-def build_clique_cache(g: CSRGraph, devices, cslp_res, cost_plan: dict,
-                       mem_per_device: float, materialize: bool = True) -> CliqueCache:
-    """Fill per-device queues until the planned per-device budgets (§4.2 S3)."""
-    k_g = len(devices)
+def plan_cache_contents(g: CSRGraph, k_g: int, cslp_res, cost_plan: dict,
+                        mem_per_device: float):
+    """Fill per-device queues until the planned per-device budgets (§4.2 S3).
+    Returns (feat_ids_per_dev, topo_ids_per_dev) — the *target* residency
+    sets, shared by initial cache construction and online delta refreshes."""
     alpha = cost_plan["m_T"] / max(cost_plan["m_T"] + cost_plan["m_F"], 1)
     feat_ids, topo_ids = [], []
     for gi in range(k_g):
@@ -270,4 +421,11 @@ def build_clique_cache(g: CSRGraph, devices, cslp_res, cost_plan: dict,
         q = cslp_res.G_F[gi]
         nrows = int(bf // g.feature_bytes_per_vertex())
         feat_ids.append(q[:nrows])
+    return feat_ids, topo_ids
+
+
+def build_clique_cache(g: CSRGraph, devices, cslp_res, cost_plan: dict,
+                       mem_per_device: float, materialize: bool = True) -> CliqueCache:
+    feat_ids, topo_ids = plan_cache_contents(g, len(devices), cslp_res,
+                                             cost_plan, mem_per_device)
     return CliqueCache(g, devices, feat_ids, topo_ids, materialize=materialize)

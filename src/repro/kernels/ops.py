@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather import gather_rows_pallas
 from repro.kernels.sage_agg import sage_aggregate_pallas
+from repro.kernels.scatter import scatter_rows_pallas
 
 
 @partial(jax.jit, static_argnames=("interpret", "return_mask"))
@@ -22,6 +23,12 @@ def gather_rows(table: jax.Array, idx: jax.Array, interpret: bool = None,
                 return_mask: bool = False):
     return gather_rows_pallas(table, idx, interpret=interpret,
                               return_mask=return_mask)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def scatter_rows(table: jax.Array, idx: jax.Array, rows: jax.Array,
+                 interpret: bool = None):
+    return scatter_rows_pallas(table, idx, rows, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -38,4 +45,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                   block_k=block_k, interpret=interpret)
 
 
-__all__ = ["gather_rows", "sage_aggregate", "flash_attention", "ref"]
+__all__ = ["gather_rows", "scatter_rows", "sage_aggregate",
+           "flash_attention", "ref"]

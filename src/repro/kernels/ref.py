@@ -12,6 +12,19 @@ def gather_rows(table: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.where((idx >= 0)[:, None], out, 0).astype(table.dtype)
 
 
+def scatter_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array:
+    """out = table; out[idx[i]] = rows[i] for idx[i] in [0, N) — functional
+    (the input table is untouched); negatives/out-of-range are dropped.
+    Valid indices must be unique (cache slots freed by one refresh are)."""
+    N = table.shape[0]
+    idx = idx.reshape(-1)
+    valid = (idx >= 0) & (idx < N)
+    padded = jnp.concatenate(
+        [table, jnp.zeros((1,) + table.shape[1:], table.dtype)])
+    out = padded.at[jnp.where(valid, idx, N)].set(rows.astype(table.dtype))
+    return out[:N]
+
+
 def sage_aggregate(table: jax.Array, idx: jax.Array, weights: jax.Array):
     """Fused gather + weighted sum: out[b] = sum_f w[b,f] * table[idx[b,f]].
 

@@ -1,0 +1,85 @@
+"""Unified-cache row scatter: the online-refresh write path.
+
+Counterpart of `gather.py` for cache admissions: ``out = table`` with
+``out[idx[i]] = rows[i]`` for every valid (non-negative, in-range) index.
+The result is a *new* table — the refresh runtime double-buffers the HBM
+feature cache, so in-flight batches keep gathering from the previous
+buffer while admitted rows land in the next one.
+
+The kernel iterates the *table* rows (grid = (N, feature tiles)) and uses a
+scalar-prefetched inverse map ``inv[r] -> source row in rows (or -1)`` so
+each grid step either DMAs the admitted row or copies the existing one.
+Iterating table-side (rather than scatter-side) keeps the write set dense
+and makes duplicate indices a non-issue (last write would be grid-order
+dependent; the inverse map picks exactly one source per slot).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gather import LANES, _default_interpret
+
+
+def _scatter_kernel(inv_ref, rows_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    fresh = inv_ref[i] >= 0
+    new = rows_ref[...]
+    old = table_ref[...]
+    out_ref[...] = jnp.where(fresh, new, old)
+
+
+def scatter_rows_pallas(table: jax.Array, idx: jax.Array, rows: jax.Array, *,
+                        block_d: int = LANES,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Functional row scatter: ``out = table; out[idx[i]] = rows[i]``.
+
+    table: (N, D); idx: (B,) int (negatives and out-of-range are dropped);
+    rows: (B, D).  Indices must be unique among the valid entries — cache
+    refreshes write each freed slot exactly once (the manager guarantees
+    this); duplicate valid indices give an unspecified winner.
+
+    Returns a new (N, D) array; the input buffer is untouched, which is
+    exactly what the double-buffered cache refresh needs.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    N, D = table.shape
+    idx = idx.reshape(-1).astype(jnp.int32)
+    B = idx.shape[0]
+    if B == 0 or N == 0:
+        return table
+    block_d = min(block_d, max(D, 1))
+    Dp = -(-D // block_d) * block_d
+    if Dp != D:
+        table = jnp.pad(table, ((0, 0), (0, Dp - D)))
+        rows = jnp.pad(rows, ((0, 0), (0, Dp - D)))
+    rows = rows.astype(table.dtype)
+    # inverse map: for each table row, which admitted row (if any) lands
+    # there; invalid indices are routed to a discarded overflow slot
+    valid = (idx >= 0) & (idx < N)
+    inv = jnp.full((N + 1,), -1, jnp.int32)
+    inv = inv.at[jnp.where(valid, idx, N)].set(
+        jnp.arange(B, dtype=jnp.int32))[:N]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N, Dp // block_d),
+        in_specs=[
+            pl.BlockSpec((1, block_d),
+                         lambda i, j, inv: (jnp.maximum(inv[i], 0), j)),
+            pl.BlockSpec((1, block_d), lambda i, j, inv: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j, inv: (i, j)),
+    )
+    fn = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Dp), table.dtype),
+        interpret=interpret,
+    )
+    out = fn(inv, rows, table)
+    return out[:, :D] if Dp != D else out

@@ -60,6 +60,10 @@ class BatchSpec:
     cache_pos: Optional[np.ndarray] = None   # feat-cache slot per id (-1 miss)
     hit: Optional[np.ndarray] = None         # (len(ids),) bool
     miss_feats: Optional[np.ndarray] = None  # (n_miss, D) f32
+    # cache refresh epoch this spec's slots index into: finalize gathers
+    # from the matching (possibly previous) device buffer, so an online
+    # refresh racing the prefetch queue can never misroute cached rows
+    cache_epoch: int = 0
 
 
 def _level_positions(ids: np.ndarray, levels: List[np.ndarray]) -> List[np.ndarray]:
@@ -77,12 +81,17 @@ class BatchBuilder:
 
     def __init__(self, g: CSRGraph, cache: Optional[CliqueCache],
                  fanouts: Sequence[int],
-                 counter: Optional[TrafficCounter] = None, dev: int = 0):
+                 counter: Optional[TrafficCounter] = None, dev: int = 0,
+                 observer=None):
         self.g = g
         self.cache = cache
         self.fanouts = tuple(fanouts)
         self.counter = counter
         self.dev = dev
+        # online cache manager tap (OnlineCacheManager.observer_for): fed
+        # every sampled batch's level tensors; pure recording, so attaching
+        # one changes neither batches nor traffic accounting
+        self.observer = observer
 
     # -- phase 1: host thread --------------------------------------------
     def build_spec(self, seeds: np.ndarray,
@@ -98,6 +107,8 @@ class BatchBuilder:
         return self.finalize(self.build_spec(seeds, rng))
 
     def _account_sampling(self, levels: List[np.ndarray]) -> None:
+        if self.observer is not None:
+            self.observer.record(levels, self.fanouts)
         if self.counter is not None and self.cache is not None:
             for lvl, f in zip(levels[:-1], self.fanouts):
                 self.cache.sample_accounting(lvl.reshape(-1), f,
@@ -151,11 +162,11 @@ class DeviceBatchBuilder(BatchBuilder):
     backend = "device"
 
     def __init__(self, g, cache, fanouts, counter=None, dev=0,
-                 gather: str = "auto"):
+                 gather: str = "auto", observer=None):
         if cache is None:
             raise ValueError("DeviceBatchBuilder needs a unified cache "
                              "(build a LegionPlan, or use backend='host')")
-        super().__init__(g, cache, fanouts, counter, dev)
+        super().__init__(g, cache, fanouts, counter, dev, observer)
         if gather not in ("auto", "pallas", "xla"):
             raise ValueError(f"unknown gather impl {gather!r}")
         if gather == "auto":
@@ -176,10 +187,12 @@ class DeviceBatchBuilder(BatchBuilder):
                       else np.zeros((0, self.g.feat_dim), np.float32))
         return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
                          ids=ids, level_pos=_level_positions(ids, levels),
-                         cache_pos=cache_pos, hit=hit, miss_feats=miss_feats)
+                         cache_pos=cache_pos, hit=hit, miss_feats=miss_feats,
+                         cache_epoch=self.cache.epoch)
 
-    def _gather_cached(self, idx: np.ndarray):
-        """(n_ids,) slot ids (-1 = miss) -> (n_ids, D) rows, zeros at -1."""
+    def _gather_cached(self, idx: np.ndarray, epoch: int):
+        """(n_ids,) slot ids (-1 = miss) -> (n_ids, D) rows, zeros at -1.
+        ``epoch`` selects the double-buffered table the slots index into."""
         import jax.numpy as jnp
 
         from repro.kernels import ops, ref
@@ -187,7 +200,7 @@ class DeviceBatchBuilder(BatchBuilder):
         D = self.g.feat_dim
         if len(self.cache.feat_ids) == 0:
             return jnp.zeros((len(idx), D), jnp.float32)
-        table = self.cache.device_arrays()["feat_cache"]  # lane-padded
+        table = self.cache.device_arrays(epoch)["feat_cache"]  # lane-padded
         jidx = jnp.asarray(idx, jnp.int32)
         out = (ops.gather_rows(table, jidx) if self.gather == "pallas"
                else ref.gather_rows(table, jidx))
@@ -197,7 +210,7 @@ class DeviceBatchBuilder(BatchBuilder):
         import jax.numpy as jnp
 
         idx = np.where(spec.hit, spec.cache_pos, -1)
-        feats = self._gather_cached(idx)
+        feats = self._gather_cached(idx, spec.cache_epoch)
         miss_rows = np.flatnonzero(~spec.hit)
         if len(miss_rows):
             feats = feats.at[jnp.asarray(miss_rows)].set(

@@ -56,6 +56,7 @@ class GNNTrainResult:
     steps: int
     backend: str = "host"
     pipeline: dict = dataclasses.field(default_factory=dict)
+    refresh: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -65,7 +66,9 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               resume: bool = False, prefetch_depth: int = 2,
               shuffle: str = "local", mesh=None,
               compress_grads: bool = False, backend: str = "host",
-              gather: str = "auto") -> GNNTrainResult:
+              gather: str = "auto",
+              refresh_interval: Optional[int] = None,
+              refresh_config=None) -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
     tablets and draws seeds from the full training set (the Fig. 11 baseline).
 
@@ -74,6 +77,14 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     against the HBM-resident unified cache (``gather`` picks the cached-row
     gather impl: auto|pallas|xla) with the host filling only misses, and
     overlaps the device-side gather with the previous train step.
+
+    ``refresh_interval`` (steps) enables the online cache manager: live
+    per-vertex traffic is accumulated, drift against the planned hotness is
+    checked every interval on the prefetch worker, and a drifted clique's
+    unified cache is delta-refreshed in place (see repro.core.cache_manager).
+    ``refresh_config`` (a RefreshConfig) overrides the remaining knobs.
+    ``refresh_interval=None`` (default) disables the manager entirely —
+    batches and traffic counts are bit-identical to a run without it.
 
     With ``mesh`` (a jax Mesh with a "data" axis) the step runs as explicit
     shard_map data parallelism; ``compress_grads=True`` additionally swaps
@@ -144,10 +155,27 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     # the host pipeline (nothing device-resident to gather from) and the
     # result reports the backend that actually ran
     backend = backend if plan is not None else "host"
+    manager = None
+    if plan is not None and (refresh_interval is not None
+                             or refresh_config is not None):
+        from repro.core.cache_manager import OnlineCacheManager, RefreshConfig
+
+        rc = refresh_config or RefreshConfig()
+        if refresh_interval is not None:
+            rc = dataclasses.replace(rc, interval=refresh_interval)
+        if rc.interval is not None and rc.interval <= prefetch_depth:
+            raise ValueError(
+                f"refresh_interval ({rc.interval}) must exceed "
+                f"prefetch_depth ({prefetch_depth}): the cache double "
+                "buffer retains one epoch, so queued specs older than one "
+                "refresh would gather from a released buffer")
+        manager = OnlineCacheManager(g, plan, rc, counter=counter)
     builders = {}
     for d in devices:
         cache = plan.cache_for_device(d) if plan is not None else None
         kw = {"gather": gather} if backend == "device" else {}
+        if manager is not None:
+            kw["observer"] = manager.observer_for(d)
         builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
                                          counter, d, **kw)
 
@@ -171,7 +199,9 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
 
     prefetcher = Prefetcher(spec_fn, depth=prefetch_depth,
-                            limit=max(steps - step0, 0))
+                            limit=max(steps - step0, 0),
+                            pre_batch_hook=(manager.on_step
+                                            if manager is not None else None))
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
@@ -204,11 +234,17 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                 epoch_times.append(time.perf_counter() - t_epoch)
                 t_epoch = time.perf_counter()
     finally:
-        prefetcher.close()
-        if ckpt:
-            ckpt.save(steps, (params, opt_state))
-            ckpt.close()
+        # close() may re-raise a worker exception (see Prefetcher.close);
+        # the final checkpoint must be written either way
+        try:
+            prefetcher.close()
+        finally:
+            if ckpt:
+                ckpt.save(steps, (params, opt_state))
+                ckpt.close()
     return GNNTrainResult(losses=losses, accs=accs, epoch_times=epoch_times,
                           counter=counter, straggler=monitor.summary(),
                           steps=steps - step0, backend=backend,
-                          pipeline=prefetcher.summary())
+                          pipeline=prefetcher.summary(),
+                          refresh=(manager.summary()
+                                   if manager is not None else {}))

@@ -22,21 +22,30 @@ from typing import Callable, Iterator, Optional
 
 class Prefetcher:
     def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2,
-                 limit: Optional[int] = None):
+                 limit: Optional[int] = None,
+                 pre_batch_hook: Optional[Callable[[int], None]] = None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
         traffic accounting — would include a timing-dependent tail of
-        batches nobody consumes."""
+        batches nobody consumes.
+
+        ``pre_batch_hook(step)`` runs on the worker thread immediately
+        before building batch ``step`` — serialized with ``batch_fn`` by
+        construction, which is what lets the online cache manager mutate
+        cache residency between (never during) spec builds without a lock.
+        Hook exceptions propagate exactly like batch_fn exceptions."""
         self._batch_fn = batch_fn
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = 0
         self._limit = limit
+        self._hook = pre_batch_hook
         self._build_s = 0.0
         self._built = 0
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._exc: Optional[BaseException] = None
+        self._exc_raised = False
         self._thread.start()
 
     def _worker(self):
@@ -44,6 +53,8 @@ class Prefetcher:
             while not self._stop.is_set():
                 if self._limit is not None and self._step >= self._limit:
                     return
+                if self._hook is not None:
+                    self._hook(self._step)
                 t0 = time.perf_counter()
                 batch = self._batch_fn(self._step)
                 self._build_s += time.perf_counter() - t0
@@ -55,11 +66,12 @@ class Prefetcher:
                         break
                     except queue.Full:
                         continue
-        except BaseException as e:  # surfaced on next get()
+        except BaseException as e:  # surfaced on next get()/close()
             self._exc = e
 
     def get(self, timeout: float = 60.0) -> dict:
         if self._exc is not None:
+            self._exc_raised = True
             raise self._exc
         return self._q.get(timeout=timeout)
 
@@ -71,8 +83,14 @@ class Prefetcher:
                 "host_build_s_mean": self._build_s / max(self._built, 1)}
 
     def close(self):
+        """Stop the worker.  A worker exception that was never surfaced via
+        ``get()`` re-raises here — a failure in the final prefetched batches
+        (or in a refresh hook) must not be silently swallowed at shutdown."""
         self._stop.set()
         self._thread.join(timeout=5)
+        if self._exc is not None and not self._exc_raised:
+            self._exc_raised = True
+            raise self._exc
 
 
 class StragglerMonitor:

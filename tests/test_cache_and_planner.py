@@ -85,6 +85,59 @@ def test_elastic_replan_preserves_training_set(setup):
     assert len(plan2.caches) == len(plan2.partition.cliques)
 
 
+def test_elastic_replan_shrink_to_single_device(setup):
+    """Seven of eight devices die: everything collapses into one
+    single-device clique that still owns the full training set and a
+    working cache."""
+    g, plan = setup
+    plan2 = replan_on_topology_change(g, plan, topology_matrix("nv4"),
+                                      alive=[5])
+    assert plan2.partition.cliques == [[5]]
+    old = np.sort(np.concatenate(list(plan.partition.tablets.values())))
+    new = np.sort(np.concatenate(list(plan2.partition.tablets.values())))
+    np.testing.assert_array_equal(old, new)
+    cache = plan2.caches[0]
+    assert len(cache.feat_ids) > 0
+    ids = np.unique(np.random.default_rng(1).integers(0, g.n, 200))
+    np.testing.assert_allclose(cache.extract_features(ids, 5, None),
+                               g.get_features(ids), rtol=1e-6)
+
+
+def test_elastic_replan_zero_memory_budget(setup):
+    """mem_per_device=0 must yield empty (but functional) caches — every
+    request is a miss, nothing crashes."""
+    g, plan = setup
+    plan2 = replan_on_topology_change(g, plan, topology_matrix("nv4"),
+                                      mem_per_device=0.0)
+    for cache in plan2.caches:
+        assert len(cache.feat_ids) == 0 and len(cache.topo_ids) == 0
+    cache = plan2.caches[0]
+    ids = np.unique(np.random.default_rng(2).integers(0, g.n, 100))
+    counter = TrafficCounter(n_devices=8)
+    out = cache.extract_features(ids, 0, counter)
+    np.testing.assert_allclose(out, g.get_features(ids), rtol=1e-6)
+    assert counter.feature_hits == 0
+    assert counter.feature_requests == len(ids)
+
+
+def test_elastic_replan_budget_growth_readmits(setup):
+    """Growing the reservation's memory re-admits previously evicted
+    vertices: the small-budget cache contents are a subset of the
+    grown-budget contents (fills are hotness-ordered prefixes)."""
+    g, _ = setup
+    small = build_plan(g, topology_matrix("nv4"), mem_per_device=100_000,
+                       batch_size=512, seed=0)
+    grown = replan_on_topology_change(g, small, topology_matrix("nv4"),
+                                      mem_per_device=1_000_000)
+    assert grown.mem_per_device == 1_000_000
+    readmitted = 0
+    for c_small, c_grown in zip(small.caches, grown.caches):
+        assert len(c_grown.feat_ids) >= len(c_small.feat_ids)
+        assert np.isin(c_small.feat_ids, c_grown.feat_ids).all()
+        readmitted += len(np.setdiff1d(c_grown.feat_ids, c_small.feat_ids))
+    assert readmitted > 0  # growth actually admitted evicted vertices
+
+
 def test_device_sample_cached_valid(setup):
     """Device-side sampling from the HBM topology cache returns true
     neighbors for cached vertices and -1 for misses."""

@@ -1,0 +1,308 @@
+"""Online cache management: EWMA blending, drift detection, delta refresh
+correctness (host + device, both epochs), and recovery under seed drift."""
+import numpy as np
+import pytest
+
+from repro.core.cache_manager import (AccessAccumulator, OnlineCacheManager,
+                                      RefreshConfig)
+from repro.core.cliques import topology_matrix
+from repro.core.hotness import HotnessStats, ewma_blend, weighted_topk_overlap
+from repro.core.planner import build_plan, replan_cache_from_hotness
+from repro.core.unified_cache import TrafficCounter
+from repro.graph.csr import CSRGraph, powerlaw_graph
+from repro.models.gnn import GNNConfig
+from repro.train.batch import DeviceBatchBuilder, HostBatchBuilder
+from repro.train.loop import train_gnn
+
+FANOUTS = (4, 3)
+
+
+def two_community_graph(n_half, avg_degree, seed=0, feat_dim=32):
+    a = powerlaw_graph(n_half, avg_degree, seed=seed, feat_dim=feat_dim)
+    b = powerlaw_graph(n_half, avg_degree, seed=seed + 1, feat_dim=feat_dim)
+    indptr = np.concatenate([a.indptr, a.indptr[-1] + b.indptr[1:]])
+    indices = np.concatenate([a.indices,
+                              (b.indices + n_half).astype(np.int32)])
+    return CSRGraph(indptr=indptr, indices=indices, n=2 * n_half,
+                    feat_dim=feat_dim, seed=seed)
+
+
+# ---------------------------------------------------------------- hotness --
+
+def _stats(n=50, k_g=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return HotnessStats(H_T=rng.integers(0, 20, (k_g, n)),
+                        H_F=rng.integers(0, 20, (k_g, n)), N_TSUM=1000)
+
+
+def test_ewma_blend_beta_zero_keeps_base():
+    base = _stats()
+    obs = _stats(seed=1)
+    out = ewma_blend(base, obs.H_T, obs.H_F, 500, beta=0.0)
+    np.testing.assert_allclose(out.H_T, base.H_T)
+    np.testing.assert_allclose(out.H_F, base.H_F)
+    assert out.N_TSUM == base.N_TSUM
+
+
+def test_ewma_blend_beta_one_is_scaled_observation():
+    base = _stats()
+    obs = _stats(seed=1)
+    out = ewma_blend(base, obs.H_T, obs.H_F, 500, beta=1.0)
+    # pure observation, rescaled to the base's total mass
+    np.testing.assert_allclose(out.H_T.sum(), base.H_T.sum(), rtol=1e-9)
+    np.testing.assert_allclose(
+        out.H_F, obs.H_F * (base.H_F.sum() / obs.H_F.sum()), rtol=1e-9)
+
+
+def test_ewma_blend_validates_beta():
+    base = _stats()
+    with pytest.raises(ValueError):
+        ewma_blend(base, base.H_T, base.H_F, 1, beta=1.5)
+
+
+def test_weighted_topk_overlap_extremes():
+    hot = np.array([10.0, 8, 6, 4, 2, 0])
+    assert weighted_topk_overlap(hot, hot, 3) == pytest.approx(1.0)
+    shifted = hot[::-1].copy()
+    assert weighted_topk_overlap(hot, shifted, 3) == pytest.approx(0.0)
+    assert weighted_topk_overlap(hot, shifted, 0) == 1.0
+    assert weighted_topk_overlap(hot, np.zeros(6), 3) == 1.0
+
+
+def test_access_accumulator_matches_presample_semantics():
+    g = powerlaw_graph(500, 6, seed=3, feat_dim=8)
+    from repro.graph.sampling import host_sample_batch
+
+    acc = AccessAccumulator(1, g.n)
+    rng = np.random.default_rng(0)
+    levels = host_sample_batch(g, np.arange(32), FANOUTS, rng)
+    acc.record(g, 0, levels, FANOUTS)
+    flat = np.concatenate([l.reshape(-1) for l in levels])
+    flat = flat[flat >= 0]
+    expect = np.zeros(g.n, np.int64)
+    np.add.at(expect, flat, 1)
+    np.testing.assert_array_equal(acc.H_F[0], expect)
+    assert acc.batches == 1 and acc.tsum > 0
+    acc.reset()
+    assert acc.H_F.sum() == 0 and acc.batches == 0
+
+
+# ---------------------------------------------------- cache delta refresh --
+
+@pytest.fixture(scope="module")
+def plan_setup():
+    g = powerlaw_graph(6000, 10, seed=4, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=1_000_000,
+                      batch_size=256, seed=0)
+    return g, plan
+
+
+def test_apply_feature_delta_host_and_device():
+    g = powerlaw_graph(3000, 8, seed=9, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=500_000,
+                      batch_size=128, seed=0)
+    cache = plan.caches[0]
+    # materialize device arrays so the scatter path runs too
+    old_epoch = cache.epoch
+    old_table = np.asarray(cache.device_arrays()["feat_cache"]).copy()
+    n_swap = 16
+    evict = cache.feat_ids[:n_swap].copy()
+    uncached = np.setdiff1d(np.arange(g.n), cache.feat_ids)[:n_swap]
+    cache.begin_epoch()
+    info = cache.apply_feature_delta(evict, uncached,
+                                     np.zeros(n_swap, np.int32),
+                                     scatter="pallas")
+    assert info == {"evicted": n_swap, "admitted": n_swap,
+                    "bytes_h2d": n_swap * g.feat_dim * 4}
+    # host mapping: evicted miss, admitted hit with true rows
+    pos_e, hit_e = cache.split_hits(evict)
+    assert not hit_e.any()
+    pos_a, hit_a = cache.split_hits(uncached)
+    assert hit_a.all()
+    np.testing.assert_allclose(cache.feat_cache[pos_a],
+                               g.get_features(uncached), rtol=1e-6)
+    np.testing.assert_allclose(cache.extract_features(uncached, 0, None),
+                               g.get_features(uncached), rtol=1e-6)
+    # device table of the new epoch has the admitted rows in place
+    D = g.feat_dim
+    new_table = np.asarray(cache.device_arrays(cache.epoch)["feat_cache"])
+    np.testing.assert_allclose(new_table[pos_a, :D],
+                               g.get_features(uncached), rtol=1e-6)
+    # the previous epoch's buffer is retained, bit-unchanged (double buffer)
+    np.testing.assert_array_equal(
+        np.asarray(cache.device_arrays(old_epoch)["feat_cache"]), old_table)
+    # a second rotation releases it
+    cache.begin_epoch()
+    cache.apply_feature_delta(uncached[:1], evict[:1],
+                              np.zeros(1, np.int32))
+    with pytest.raises(RuntimeError):
+        cache.device_arrays(old_epoch)
+
+
+def test_device_arrays_never_alias_host_mirrors():
+    """Regression: on the CPU backend jnp.asarray can zero-copy aligned
+    numpy buffers; the retained epoch's feat_cache/feat_pos must be real
+    copies or in-place host-mirror mutation silently rewrites the
+    double-buffered snapshot (alignment-dependent corruption)."""
+    g = powerlaw_graph(2000, 8, seed=11, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=300_000,
+                      batch_size=128, seed=0)
+    cache = plan.caches[0]
+    da = cache.device_arrays()
+    before_fc = np.asarray(da["feat_cache"]).copy()
+    before_fp = np.asarray(da["feat_pos"]).copy()
+    cache.feat_cache[:] = -123.0  # brutal in-place host mutation
+    cache.feat_pos[:] = -9
+    np.testing.assert_array_equal(np.asarray(da["feat_cache"]), before_fc)
+    np.testing.assert_array_equal(np.asarray(da["feat_pos"]), before_fp)
+
+
+def test_begin_epoch_without_device_arrays_is_host_only_noop():
+    """Host-backend refresh must not materialize device arrays: the
+    rotation only bumps the epoch id."""
+    g = powerlaw_graph(2000, 8, seed=12, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=300_000,
+                      batch_size=128, seed=0)
+    cache = plan.caches[0]
+    assert cache._device_arrays is None
+    e = cache.begin_epoch()
+    assert e == 1 and cache._device_arrays is None
+    n_swap = 4
+    evict = cache.feat_ids[:n_swap].copy()
+    admit = np.setdiff1d(np.arange(g.n), cache.feat_ids)[:n_swap]
+    cache.apply_feature_delta(evict, admit, np.zeros(n_swap, np.int32))
+    assert cache._device_arrays is None  # still fully lazy
+    np.testing.assert_allclose(cache.extract_features(admit, 0, None),
+                               g.get_features(admit), rtol=1e-6)
+
+
+def test_replan_cache_from_hotness_targets_budget(plan_setup):
+    g, plan = plan_setup
+    res, cost_plan, feat_tgt, topo_tgt = replan_cache_from_hotness(
+        g, plan, 0, plan.stats[0])
+    k_g = len(plan.partition.cliques[0])
+    assert len(feat_tgt) == k_g and len(topo_tgt) == k_g
+    # per-device residency respects the planned per-device byte split
+    alpha = cost_plan["m_T"] / max(cost_plan["m_T"] + cost_plan["m_F"], 1)
+    row = g.feature_bytes_per_vertex()
+    for gi in range(k_g):
+        assert len(feat_tgt[gi]) * row <= plan.mem_per_device * (1 - alpha)
+        assert g.topology_bytes(topo_tgt[gi]).sum() \
+            <= plan.mem_per_device * alpha
+    # unchanged hotness -> targets reproduce the existing cache contents
+    for a, b in zip(feat_tgt, plan.caches[0].feat_ids_by_device()):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_builder_parity_after_refresh():
+    """Host and device backends stay bit-identical across a live refresh."""
+    g = two_community_graph(1500, 8, seed=2)
+    rng0 = np.random.default_rng(0)
+    pool_a = np.sort(rng0.choice(g.n // 2, 300, replace=False))
+    pool_b = np.sort(g.n // 2 + rng0.choice(g.n // 2, 300, replace=False))
+    mem = 0.2 * g.n * g.feat_dim * 4
+    plan = build_plan(g, topology_matrix("nv2", 2), mem_per_device=mem,
+                      train_vertices=pool_a, batch_size=128, seed=0,
+                      fanouts=FANOUTS)
+    counter_h = TrafficCounter.for_plan(plan)
+    counter_d = TrafficCounter.for_plan(plan)
+    mgr = OnlineCacheManager(g, plan,
+                             RefreshConfig(interval=4, drift_threshold=0.97))
+    cache = plan.cache_for_device(0)
+    bh = HostBatchBuilder(g, cache, FANOUTS, counter_h, 0)
+    bd = DeviceBatchBuilder(g, cache, FANOUTS, counter_d, 0, gather="xla",
+                            observer=mgr.observer_for(0))
+    rng_h, rng_d = np.random.default_rng(7), np.random.default_rng(7)
+    for step in range(1, 13):
+        mgr.on_step(step)
+        seeds = pool_b[np.random.default_rng(100 + step).integers(
+            0, len(pool_b), 64)]
+        batch_h = bh.build(seeds, rng_h)
+        batch_d = bd.build(seeds, rng_d)
+        for k in batch_h:
+            np.testing.assert_allclose(np.asarray(batch_h[k], np.float32),
+                                       np.asarray(batch_d[k], np.float32),
+                                       rtol=0, atol=0, err_msg=f"{step}/{k}")
+    assert mgr.stats.refreshes >= 1  # the parity above spanned a refresh
+    assert counter_h.feature_hits == counter_d.feature_hits
+    assert counter_h.pcie_transactions == counter_d.pcie_transactions
+
+
+def test_train_gnn_refresh_disabled_is_bit_identical():
+    g = powerlaw_graph(4000, 8, seed=4, feat_dim=32)
+    cfg = GNNConfig(feat_dim=32, hidden=32, batch_size=64, fanouts=FANOUTS,
+                    lr=3e-3)
+    r = []
+    for kw in ({}, {"refresh_interval": None}):
+        plan = build_plan(g, topology_matrix("nv2"), mem_per_device=500_000,
+                          batch_size=128, seed=0)
+        r.append(train_gnn(g, plan, cfg, steps=6, seed=0, backend="device",
+                           **kw))
+    np.testing.assert_allclose(r[0].losses, r[1].losses, atol=0)
+    assert r[0].counter.pcie_transactions == r[1].counter.pcie_transactions
+    assert r[0].counter.feature_hits == r[1].counter.feature_hits
+    np.testing.assert_array_equal(r[0].counter.bytes_matrix,
+                                  r[1].counter.bytes_matrix)
+    assert r[1].refresh == {}
+
+
+def test_refresh_interval_must_exceed_prefetch_depth():
+    g = powerlaw_graph(2000, 6, seed=1, feat_dim=16)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=200_000,
+                      batch_size=128, seed=0)
+    cfg = GNNConfig(feat_dim=16, hidden=16, batch_size=32, fanouts=FANOUTS)
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        train_gnn(g, plan, cfg, steps=4, refresh_interval=2,
+                  prefetch_depth=4)
+
+
+def test_drift_recovery_beats_static_and_nears_oracle():
+    """The acceptance bar: under a seed-distribution shift the online
+    manager recovers >= 80% of the oracle full-replan hit rate; the static
+    plan stays collapsed."""
+    g = two_community_graph(1500, 8, seed=0)
+    rng0 = np.random.default_rng(0)
+    pool_a = np.sort(rng0.choice(g.n // 2, 300, replace=False))
+    pool_b = np.sort(g.n // 2 + rng0.choice(g.n // 2, 300, replace=False))
+    mem = 0.2 * g.n * g.feat_dim * 4
+    devices = [0, 1]
+
+    def run(online, plan_pool):
+        plan = build_plan(g, topology_matrix("nv2", 2), mem_per_device=mem,
+                          train_vertices=plan_pool, batch_size=128, seed=0,
+                          fanouts=FANOUTS)
+        counter = TrafficCounter.for_plan(plan)
+        mgr = OnlineCacheManager(
+            g, plan, RefreshConfig(interval=5, ewma_beta=0.7,
+                                   drift_threshold=0.97),
+            counter=counter) if online else None
+        builders = {d: DeviceBatchBuilder(
+            g, plan.cache_for_device(d), FANOUTS, counter, d, gather="xla",
+            observer=mgr.observer_for(d) if mgr else None) for d in devices}
+        rng = np.random.default_rng(1)
+        step = 0
+
+        def phase(batches, pool):
+            nonlocal step
+            h0, r0 = counter.feature_hits, counter.feature_requests
+            for _ in range(batches):
+                step += 1
+                if mgr is not None:
+                    mgr.on_step(step)
+                for d in devices:
+                    seeds = pool[rng.integers(0, len(pool), 96)]
+                    builders[d].finalize(builders[d].build_spec(seeds, rng))
+            return ((counter.feature_hits - h0)
+                    / max(counter.feature_requests - r0, 1))
+
+        phase(6, pool_a)
+        hits = [phase(5, pool_b) for _ in range(4)]
+        return hits[-1], (mgr.stats if mgr else None)
+
+    static, _ = run(False, pool_a)
+    online, stats = run(True, pool_a)
+    oracle, _ = run(False, pool_b)
+    assert oracle > 0.4  # the instance is cacheable at all
+    assert static < 0.2 * oracle  # the static plan really collapsed
+    assert stats.refreshes >= 1 and stats.admitted > 0
+    assert online >= 0.8 * oracle, (static, online, oracle)

@@ -54,3 +54,53 @@ def test_budget_respected(cm):
     B = 0.25 * (cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes)
     kn = cm.plan_knapsack(B)
     assert kn["m_T"] + kn["m_F"] <= B + 1e-6
+
+
+def _random_clique_cm(rng):
+    """A randomized synthetic clique: adversarial hotness/degree mixes (big
+    high-gain adjacency lists with middling density included) without going
+    through a graph build."""
+    n = int(rng.integers(50, 400))
+    A_T = rng.pareto(1.5, n) * rng.integers(1, 50)
+    A_F = rng.pareto(1.2, n) * rng.integers(1, 50)
+    # heavy-tailed degrees, occasionally huge (the greedy-truncation trap)
+    deg = np.maximum(rng.pareto(1.0, n) * 10, 1).astype(np.int64)
+    if rng.random() < 0.5:
+        hot_i = int(np.argmax(A_T))
+        deg[hot_i] = max(deg.sum() // 3, 1)  # one dominating item
+    Q_T = np.argsort(-A_T, kind="stable")
+    Q_F = np.argsort(-A_F, kind="stable")
+    topo_bytes = (deg[Q_T] * 4 + 8).astype(np.float64)
+    return CliqueCostModel(A_T=A_T, A_F=A_F, Q_T=Q_T, Q_F=Q_F,
+                           N_TSUM=int(rng.integers(1000, 100000)),
+                           topo_bytes=topo_bytes,
+                           feat_bytes=int(rng.integers(16, 1024)))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_knapsack_never_worse_than_alpha_grid_randomized(seed):
+    """Satellite parity bar: on randomized cliques (heavy-tailed hotness,
+    adversarial degree outliers) knapsack's predicted N_total must be <=
+    the best alpha-grid plan.  The raw density-greedy alone loses when a
+    huge high-gain adjacency list sits early in Q_T but late in density
+    order and gets truncated; the exact-prefix guard restores dominance."""
+    rng = np.random.default_rng(seed)
+    cm = _random_clique_cm(rng)
+    total = cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes
+    for frac in (0.02, 0.1, 0.3, 0.7):
+        B = frac * total
+        kn = cm.plan_knapsack(B)
+        sweep = cm.plan(B)
+        assert kn["N_total"] <= sweep["N_total"] + 1e-6, (seed, frac)
+        assert kn["m_T"] + kn["m_F"] <= B + 1e-6
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_prefix_exact_matches_or_beats_sweep(seed):
+    rng = np.random.default_rng(100 + seed)
+    cm = _random_clique_cm(rng)
+    total = cm.topo_csum_bytes[-1] + len(cm.Q_F) * cm.feat_bytes
+    for frac in (0.05, 0.4):
+        B = frac * total
+        assert cm.plan_prefix_exact(B)["N_total"] \
+            <= cm.plan(B)["N_total"] + 1e-6

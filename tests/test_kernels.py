@@ -53,6 +53,55 @@ def test_gather_batched_index_shape():
         np.asarray(out), np.asarray(ref.gather_rows(table, idx.reshape(-1))).reshape(7, 5, 128))
 
 
+@pytest.mark.parametrize("N,D,B", [(64, 128, 16), (100, 256, 33),
+                                   (20, 100, 7), (16, 130, 5)])
+def test_scatter_matches_ref(N, D, B):
+    key = jax.random.PRNGKey(4)
+    table = jax.random.normal(key, (N, D))
+    rng = np.random.default_rng(0)
+    # unique valid targets + some dropped (negative / out-of-range) entries
+    idx = rng.permutation(N)[:B].astype(np.int32)
+    bad = np.resize(np.array([-1, N, -7, N + 3], np.int32), max(B // 3, 1))
+    idx[: len(bad)] = bad
+    rows = jax.random.normal(jax.random.fold_in(key, 1), (B, D))
+    jidx = jnp.asarray(idx)
+    np.testing.assert_allclose(
+        np.asarray(ops.scatter_rows(table, jidx, rows)),
+        np.asarray(ref.scatter_rows(table, jidx, rows)), rtol=1e-6)
+
+
+def test_scatter_is_functional_and_targets_only_valid_rows():
+    table = jnp.arange(12.0).reshape(4, 3)
+    idx = jnp.asarray([2, -1], jnp.int32)
+    rows = jnp.full((2, 3), -5.0)
+    out = np.asarray(ops.scatter_rows(table, idx, rows))
+    np.testing.assert_array_equal(out[2], [-5.0, -5.0, -5.0])
+    for r in (0, 1, 3):  # untouched rows preserved
+        np.testing.assert_array_equal(out[r], np.asarray(table)[r])
+    # input untouched (the double buffer relies on this)
+    np.testing.assert_array_equal(np.asarray(table),
+                                  np.arange(12.0).reshape(4, 3))
+
+
+def test_scatter_empty_updates_is_identity():
+    table = jnp.arange(20.0).reshape(5, 4)
+    out = ops.scatter_rows(table, jnp.zeros((0,), jnp.int32),
+                           jnp.zeros((0, 4)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table))
+
+
+def test_scatter_then_gather_roundtrip():
+    """The refresh write path feeds the gather read path: admitted rows come
+    back bit-exact through the same slot ids."""
+    key = jax.random.PRNGKey(8)
+    table = jax.random.normal(key, (32, 128))
+    rows = jax.random.normal(jax.random.fold_in(key, 1), (6, 128))
+    slots = jnp.asarray([3, 30, 7, 0, 21, 16], jnp.int32)
+    new = ops.scatter_rows(table, slots, rows)
+    got = ops.gather_rows(new, slots)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
+
+
 @pytest.mark.parametrize("N,D,B,F", [(64, 128, 8, 5), (128, 256, 16, 10),
                                      (32, 128, 4, 25)])
 def test_sage_aggregate_matches_ref(N, D, B, F):

@@ -1,0 +1,69 @@
+"""Prefetcher contract: exception surfacing (next() AND close()) + the
+pre-batch hook the online cache manager runs on."""
+import time
+
+import pytest
+
+from repro.train.pipeline import Prefetcher
+
+
+def _wait_worker_done(p, timeout=5.0):
+    t0 = time.time()
+    while p._thread.is_alive() and time.time() - t0 < timeout:
+        time.sleep(0.01)
+
+
+def test_prefetcher_produces_limit_batches():
+    p = Prefetcher(lambda step: {"step": step}, depth=2, limit=3)
+    got = [p.get()["step"] for _ in range(3)]
+    assert got == [0, 1, 2]
+    p.close()
+
+
+def test_worker_exception_surfaces_on_get():
+    def bad(step):
+        raise RuntimeError("boom")
+
+    p = Prefetcher(bad, depth=2, limit=4)
+    _wait_worker_done(p)
+    with pytest.raises(RuntimeError, match="boom"):
+        p.get(timeout=5)
+    # already surfaced once: close() must not raise it a second time
+    p.close()
+
+
+def test_worker_exception_surfaces_on_close():
+    """Regression: a worker failure in a batch nobody consumes (e.g. the
+    refresh hook dying while the train loop exits) must re-raise at
+    close(), not vanish at shutdown."""
+    def bad(step):
+        if step >= 1:
+            raise RuntimeError("late failure")
+        return {"step": step}
+
+    p = Prefetcher(bad, depth=4, limit=4)
+    _wait_worker_done(p)  # consumer never looks at the queue again
+    with pytest.raises(RuntimeError, match="late failure"):
+        p.close()
+
+
+def test_pre_batch_hook_runs_before_each_batch_in_order():
+    seen = []
+    p = Prefetcher(lambda step: {"step": step}, depth=2, limit=3,
+                   pre_batch_hook=seen.append)
+    for _ in range(3):
+        p.get()
+    p.close()
+    assert seen == [0, 1, 2]
+
+
+def test_pre_batch_hook_exception_surfaces_on_close():
+    def hook(step):
+        if step == 1:
+            raise ValueError("hook died")
+
+    p = Prefetcher(lambda step: {"step": step}, depth=4, limit=4,
+                   pre_batch_hook=hook)
+    _wait_worker_done(p)
+    with pytest.raises(ValueError, match="hook died"):
+        p.close()
