@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Sequence
+from typing import Dict, List
 
 import numpy as np
 
@@ -95,7 +95,6 @@ def build_system(g: CSRGraph, strategy: str, nv_kind: str, cache_rows_per_dev: i
     topo = topology_matrix(nv_kind, n_devices)
     cliques = clique_cover(topo)
     clique_of = {d: ci for ci, c in enumerate(cliques) for d in c}
-    rng = np.random.default_rng(seed)
 
     if strategy in ("gnnlab", "quiver-plus"):
         A_F, _, _ = _global_hotness(g, train, seed)

@@ -11,7 +11,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.roofline import load_records, markdown_table, roofline_fraction
+from benchmarks.roofline import load_records, markdown_table
 
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
 

@@ -18,10 +18,10 @@ from repro.core.cliques import topology_matrix
 from repro.core.cost_model import CliqueCostModel
 from repro.core.cslp import cslp
 from repro.core.hotness import CLS, S_FLOAT32, presample_clique
-from repro.core.partition import hierarchical_partition, partition_graph
+from repro.core.partition import hierarchical_partition
 from repro.core.planner import build_plan
 from repro.core.unified_cache import TrafficCounter
-from repro.graph.csr import PAPER_DATASETS, powerlaw_graph
+from repro.graph.csr import powerlaw_graph
 from repro.graph.sampling import host_sample_batch, unique_vertices
 from repro.models.gnn import GNNConfig
 from repro.train.loop import train_gnn
@@ -108,8 +108,6 @@ def fig8_end_to_end() -> List[tuple]:
     train = _train_set(g)
     rows = []
     cache_rows = int(0.05 * g.n)
-    tx_row = int(np.ceil(g.feat_dim * S_FLOAT32 / CLS))
-    epoch_feature_reqs = None
     results = {}
     for strategy, nv in [("dgl-uva", None), ("gnnlab", "nonv"),
                          ("legion", "nv4")]:
@@ -437,6 +435,19 @@ def bench_cache_refresh() -> List[tuple]:
     return rows
 
 
+def bench_clique_scaling() -> List[tuple]:
+    """Beyond-paper: clique-parallel executor scaling, 1 -> 4 simulated
+    devices.  Each clique size runs in its own subprocess (XLA's forced
+    host device count must be set before jax import); the sharded
+    shard_map executor routes every feature gather by cache-partition
+    ownership, and the rows break the traffic out per device: local-hit
+    bytes vs cross-device peer bytes vs host-fill (PCIe) bytes, plus
+    clique-wide throughput.  See benchmarks/scaling.py."""
+    from benchmarks.scaling import run_scaling
+
+    return run_scaling((1, 2, 4), smoke=common.SMOKE)
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -451,4 +462,5 @@ ALL_BENCHES = [
     ("planner_comparison", bench_planner_comparison),
     ("batch_builder", bench_batch_builder),
     ("cache_refresh", bench_cache_refresh),
+    ("clique_scaling", bench_clique_scaling),
 ]

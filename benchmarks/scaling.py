@@ -1,0 +1,144 @@
+"""Clique-parallel scaling benchmark: 1 -> N simulated devices.
+
+For each clique size the benchmark spawns a fresh worker process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must be
+set before jax import, hence the subprocess), builds a single-clique plan,
+trains with ``backend="sharded"`` — the shard_map executor with
+cache-partition-aware gather routing — and reports
+
+* throughput (steps/s and seed vertices/s), and
+* the feature-gather traffic split per device: local-hit bytes (own cache
+  partition), cross-device peer bytes (intra-clique exchange), and
+  host-fill bytes (true misses over PCIe),
+
+as ``name,value,derived`` CSV rows in the run.py format.  Registered as
+the ``clique_scaling`` benchmark in benchmarks/run.py; run standalone with
+``python benchmarks/scaling.py [--smoke] [--devices 1,2,4]``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import List
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _worker(n_dev: int, smoke: bool) -> None:
+    """Runs in the subprocess: train sharded on an n_dev clique, print
+    one JSON result line prefixed with RESULT:."""
+    sys.path.insert(0, SRC)
+    import numpy as np
+
+    from repro.core.cliques import topology_matrix
+    from repro.core.planner import build_plan
+    from repro.core.unified_cache import TrafficCounter
+    from repro.graph.csr import powerlaw_graph
+    from repro.models.gnn import GNNConfig
+    from repro.train.loop import train_gnn
+
+    if smoke:
+        n, deg, feat, steps, batch = 4000, 8, 32, 10, 128
+    else:
+        n, deg, feat, steps, batch = 40_000, 16, 64, 30, 512
+    g = powerlaw_graph(n, deg, seed=0, feat_dim=feat)
+    plan = build_plan(g, topology_matrix("nv8", n_dev),
+                      mem_per_device=0.1 * g.n * g.feat_dim * 4,
+                      batch_size=batch, seed=0, fanouts=(5, 3))
+    cfg = GNNConfig(feat_dim=feat, hidden=64, batch_size=batch,
+                    fanouts=(5, 3), lr=1e-3)
+    counter = TrafficCounter.for_plan(plan)
+    t0 = time.perf_counter()
+    res = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=counter,
+                    backend="sharded", gather="auto")
+    wall = time.perf_counter() - t0
+    bm = counter.bytes_matrix
+    per_dev = []
+    for d in range(n_dev):
+        local = int(bm[d, d])
+        peer = int(bm[d, :-1].sum() - bm[d, d])
+        host = int(bm[d, -1])
+        per_dev.append({"device": d, "local_bytes": local,
+                        "peer_bytes": peer, "host_fill_bytes": host})
+    out = {"n_dev": n_dev, "steps": steps, "wall_s": wall,
+           "steps_per_s": steps / wall,
+           "seeds_per_s": steps * batch / wall,
+           "feature_hit_rate": counter.feature_hit_rate,
+           "loss_first": float(res.losses[0]),
+           "loss_last": float(res.losses[-1]),
+           "per_dev": per_dev}
+    assert np.isfinite(res.losses).all()
+    print("RESULT:" + json.dumps(out))
+
+
+def run_scaling(device_counts=(1, 2, 4), smoke: bool = False) -> List[tuple]:
+    """Spawn one worker per clique size; returns run.py-style rows."""
+    rows: List[tuple] = []
+    for n_dev in device_counts:
+        env = dict(os.environ)
+        # append (not overwrite) so user/CI XLA flags survive; ours comes
+        # last, and the last occurrence of a repeated flag wins
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_dev}").strip()
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--worker", str(n_dev)]
+        if smoke:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=1200)
+        if r.returncode != 0:
+            raise RuntimeError(f"scaling worker n_dev={n_dev} failed:\n"
+                               f"{r.stdout}\n{r.stderr}")
+        line = next(ln for ln in r.stdout.splitlines()
+                    if ln.startswith("RESULT:"))
+        res = json.loads(line[len("RESULT:"):])
+        pfx = f"clique_scaling/{n_dev}dev"
+        rows.append((f"{pfx}/steps_per_s", res["steps_per_s"],
+                     f"wall={res['wall_s']:.2f}s steps={res['steps']}"))
+        rows.append((f"{pfx}/seeds_per_s", res["seeds_per_s"],
+                     "clique-wide seed throughput"))
+        rows.append((f"{pfx}/feature_hit_rate", res["feature_hit_rate"],
+                     f"loss {res['loss_first']:.3f}->{res['loss_last']:.3f}"))
+        for pd in res["per_dev"]:
+            d = pd["device"]
+            rows.append((f"{pfx}/dev{d}/local_bytes",
+                         float(pd["local_bytes"]), "own cache partition"))
+            rows.append((f"{pfx}/dev{d}/peer_bytes",
+                         float(pd["peer_bytes"]),
+                         "intra-clique cross-device exchange"))
+            rows.append((f"{pfx}/dev{d}/host_fill_bytes",
+                         float(pd["host_fill_bytes"]), "true misses (PCIe)"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", type=int, default=0,
+                    help="internal: run as the n-device worker")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: shrink the instance")
+    ap.add_argument("--devices", default="1,2,4",
+                    help="comma-separated clique sizes to sweep")
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.worker, args.smoke)
+        return
+    counts = tuple(int(x) for x in args.devices.split(","))
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    rows = run_scaling(counts, smoke=args.smoke)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    print(f"clique_scaling,{dt_us:.0f},ok rows={len(rows)}")
+    for name, value, note in rows:
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{name},{v},{note}")
+
+
+if __name__ == "__main__":
+    main()

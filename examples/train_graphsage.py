@@ -22,9 +22,13 @@ ap.add_argument("--full", action="store_true",
                 help="~100M-param model, a few hundred steps")
 ap.add_argument("--steps", type=int, default=0)
 ap.add_argument("--ckpt", default="/tmp/legion_sage_ckpt")
-ap.add_argument("--backend", choices=["host", "device"], default="host",
-                help="batch pipeline: host numpy path, or device-resident "
-                     "cache sampling + Pallas feature gather")
+ap.add_argument("--backend", choices=["host", "device", "sharded"],
+                default="host",
+                help="batch pipeline: host numpy path; device-resident "
+                     "cache sampling + Pallas feature gather; or the "
+                     "clique-parallel shard_map executor (needs one jax "
+                     "device per clique device — on CPU export XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=N first)")
 ap.add_argument("--refresh-interval", type=int, default=None,
                 help="enable the online cache manager: drift check + "
                      "adaptive cache refresh every N steps")
@@ -42,8 +46,10 @@ cfg = GNNConfig(feat_dim=128, hidden=hidden, batch_size=batch,
 n_params = 128 * hidden * 2 + hidden * hidden * 2 + hidden * 32
 print(f"training SAGE hidden={hidden} (~{n_params/1e6:.1f}M params) "
       f"for {steps} steps")
+# the sharded executor runs one clique; the other backends simulate all
+devices = plan.partition.cliques[0] if args.backend == "sharded" else None
 res = train_gnn(g, plan, cfg, steps=steps, checkpoint_dir=args.ckpt,
-                checkpoint_every=50, backend=args.backend,
+                checkpoint_every=50, backend=args.backend, devices=devices,
                 refresh_interval=args.refresh_interval)
 print(f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}   "
       f"final acc {res.accs[-1]:.3f}")

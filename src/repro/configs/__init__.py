@@ -3,7 +3,11 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, applicable_shapes
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                applicable_shapes)
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "applicable_shapes",
+           "ARCH_IDS", "get_config"]
 
 _ARCH_MODULES = {
     "phi3.5-moe-42b-a6.6b": "phi35_moe",

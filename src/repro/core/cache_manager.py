@@ -36,7 +36,7 @@ consumer thread only ever touches epoch-pinned device arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 

@@ -11,7 +11,7 @@ planner adapt automatically.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List
 
 import numpy as np
 

@@ -20,12 +20,11 @@ up to one item, strictly dominating the α grid; it also removes the manual
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core.cslp import CSLPResult
-from repro.core.hotness import CLS, S_FLOAT32, S_UINT32, S_UINT64
+from repro.core.hotness import CLS
 from repro.graph.csr import CSRGraph
 
 

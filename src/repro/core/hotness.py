@@ -16,7 +16,7 @@ tablet and accumulates:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 

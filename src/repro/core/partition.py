@@ -13,7 +13,7 @@ S4: tablet -> device assignment (batch seeds, shuffled locally).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List
 
 import numpy as np
 

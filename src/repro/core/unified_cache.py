@@ -16,7 +16,7 @@ benchmarks read out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -77,7 +77,6 @@ class CliqueCache:
                  materialize: bool = True):
         self.g = g
         self.devices = list(devices)
-        k_g = len(devices)
         # ---- feature cache ----
         self.feat_pos = np.full(g.n, -1, dtype=np.int64)
         owners = []
@@ -103,6 +102,9 @@ class CliqueCache:
         self.epoch = 0
         self._device_arrays = None
         self._prev_device_arrays = None
+        self._sharded_arrays = None
+        self._prev_sharded_arrays = None
+        self._shard_routing = None
         self._prev_epoch = -1
 
     def _build_topology(self, topo_ids_per_dev: Sequence[np.ndarray]) -> None:
@@ -131,6 +133,26 @@ class CliqueCache:
             self.cache_indices = None
 
     # ---- device residency ----
+    @staticmethod
+    def _lane_padded(D: int) -> int:
+        """Feature columns padded to the 128-lane boundary (only when
+        feat_dim exceeds one lane tile) — shared by the flat table and the
+        shard stack so the Pallas gather never re-pads per batch."""
+        return D if not (D > 128 and D % 128) else D + 128 - D % 128
+
+    def _epoch_view(self, current, prev, epoch: Optional[int], what: str):
+        """Double-buffered epoch pinning, shared by the flat and sharded
+        views: ``epoch`` selects the current or the single retained
+        previous buffer; anything older raises."""
+        if epoch is None or epoch == self.epoch:
+            return current
+        if epoch == self._prev_epoch and prev is not None:
+            return prev
+        raise RuntimeError(
+            f"cache epoch {epoch} is no longer resident{what} (current "
+            f"{self.epoch}, retained {self._prev_epoch}); refresh_interval "
+            "must be larger than the prefetch depth")
+
     def device_arrays(self, epoch: Optional[int] = None):
         """jnp copies (lazy): the HBM-resident cache halves.
 
@@ -149,8 +171,9 @@ class CliqueCache:
 
             fc = self.feat_cache
             D = fc.shape[1]
-            if D > 128 and D % 128:
-                fc = np.pad(fc, ((0, 0), (0, 128 - D % 128)))
+            Dp = self._lane_padded(D)
+            if Dp != D:
+                fc = np.pad(fc, ((0, 0), (0, Dp - D)))
             # feat_cache / feat_pos MUST be copies: on the CPU backend
             # jnp.asarray zero-copy aliases aligned numpy buffers, and
             # apply_feature_delta mutates those host mirrors in place —
@@ -164,14 +187,80 @@ class CliqueCache:
                 "cache_indices": jnp.asarray(self.cache_indices),
                 "topo_pos": jnp.asarray(self.topo_pos),
             }
-        if epoch is None or epoch == self.epoch:
-            return self._device_arrays
-        if epoch == self._prev_epoch and self._prev_device_arrays is not None:
-            return self._prev_device_arrays
-        raise RuntimeError(
-            f"cache epoch {epoch} is no longer resident (current "
-            f"{self.epoch}, retained {self._prev_epoch}); refresh_interval "
-            "must be larger than the prefetch depth")
+        return self._epoch_view(self._device_arrays,
+                                self._prev_device_arrays, epoch, "")
+
+    # ---- per-device shard views (clique-parallel executor) ----
+    def shard_routing(self):
+        """Ownership routing tables for the sharded executor: two int32
+        arrays over global feature-cache slots, ``owner[s]`` (clique-local
+        index of the device whose HBM shard holds slot ``s``) and
+        ``local_slot[s]`` (the row of that slot within the owner's shard).
+        Together with ``split_hits`` this is how a batch's cached ids are
+        routed: requester == owner -> local-hit gather, requester != owner
+        -> intra-clique peer exchange, pos < 0 -> host fill.
+
+        Slots freed by an online refresh keep their last routing entry;
+        they are unreachable (``feat_pos`` no longer maps any vertex to
+        them), so the stale entry is never consulted.
+
+        Memoized (the tables are invariant between refreshes and read per
+        spec build on the prefetch hot path); ``apply_feature_delta``
+        invalidates."""
+        if self._shard_routing is None:
+            owner = self.feat_owner.astype(np.int32)
+            local = np.zeros(len(owner), dtype=np.int32)
+            for gi in range(len(self.devices)):
+                sel = np.flatnonzero(owner == gi)
+                local[sel] = np.arange(len(sel), dtype=np.int32)
+            self._shard_routing = (owner, local)
+        return self._shard_routing
+
+    def shard_row_count(self) -> int:
+        """Rows of the largest per-device shard (all shards pad to this)."""
+        if len(self.feat_owner) == 0:
+            return 0
+        return int(np.bincount(self.feat_owner,
+                               minlength=len(self.devices)).max())
+
+    def sharded_device_arrays(self, epoch: Optional[int] = None):
+        """The cache's *partitioned* device residency: the feature table
+        restacked as one shard per clique device, shape
+        ``(k_g, R, D_padded)`` — row ``local_slot[s]`` of shard
+        ``owner[s]`` is global slot ``s``.  Under the clique mesh the
+        leading axis is sharded, so each device holds exactly the rows the
+        CSLP plan assigned to it, and ``routed_gather`` serves local hits
+        from it directly and peer hits via intra-clique exchange.
+
+        Same lazy build + double-buffered epoch pinning as
+        ``device_arrays``: specs built before an online refresh finalize
+        against the shard stack they indexed."""
+        if self._sharded_arrays is None:
+            import jax.numpy as jnp
+
+            if self.feat_cache is None:
+                raise RuntimeError(
+                    "sharded_device_arrays needs a materialized cache "
+                    "(build the plan with materialize_caches=True)")
+            k_g = len(self.devices)
+            owner, local = self.shard_routing()
+            R = self.shard_row_count()
+            fc = self.feat_cache
+            D = fc.shape[1]
+            Dp = self._lane_padded(D)
+            shards = np.zeros((k_g, R, Dp), dtype=np.float32)
+            if len(owner):
+                shards[owner, local, :D] = fc
+            # jnp.array (copy): the numpy staging buffers are transient but
+            # owner/local derive from feat_owner, which refreshes mutate
+            self._sharded_arrays = {
+                "feat_shards": jnp.array(shards),
+                "slot_owner": jnp.array(owner),
+                "slot_local": jnp.array(local),
+            }
+        return self._epoch_view(self._sharded_arrays,
+                                self._prev_sharded_arrays, epoch,
+                                " in sharded form")
 
     # ---- online refresh (cache manager API) ----
     def begin_epoch(self) -> int:
@@ -186,7 +275,10 @@ class CliqueCache:
         spec build would have materialized the arrays already.  The
         rotation then only bumps the epoch id."""
         self._prev_device_arrays = self._device_arrays
-        self._prev_epoch = self.epoch if self._device_arrays is not None else -1
+        self._prev_sharded_arrays = self._sharded_arrays
+        had_any = (self._device_arrays is not None
+                   or self._sharded_arrays is not None)
+        self._prev_epoch = self.epoch if had_any else -1
         self.epoch += 1
         return self.epoch
 
@@ -262,6 +354,18 @@ class CliqueCache:
             new["feat_cache"] = new_table
             new["feat_pos"] = jnp.array(self.feat_pos)  # copy: mirror mutates
             self._device_arrays = new
+        # partitioned view: routing changed, so drop the memo and — if the
+        # sharded stack was materialized — rebuild it *eagerly here*, on
+        # the refresh (prefetch worker) thread.  A lazy rebuild would run
+        # on the consumer thread at the next finalize and could snapshot
+        # the host mirrors mid-way through the *next* refresh's in-place
+        # mutation; rebuilding before this call returns keeps consumers on
+        # epoch-pinned buffers only, matching the flat device_arrays path.
+        # The retained previous epoch was stashed by begin_epoch.
+        self._shard_routing = None
+        if self._sharded_arrays is not None:
+            self._sharded_arrays = None
+            self.sharded_device_arrays()
         return {"evicted": int(len(evict_ids)), "admitted": int(n_admit),
                 "bytes_h2d": int(n_admit) * self.g.feat_dim * S_FLOAT32}
 

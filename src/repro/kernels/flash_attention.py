@@ -14,7 +14,6 @@ that q/k/v/acc blocks fit VMEM for Dh <= 256:
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -75,3 +75,42 @@ def gather_rows_pallas(table: jax.Array, idx: jax.Array, *,
     if return_mask:
         return out, idx >= 0
     return out
+
+
+def routed_gather(shard: jax.Array, owner: jax.Array, local_slot: jax.Array,
+                  axis_name: str, *, impl: str = "auto",
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Cache-partition-aware row gather — call *inside* ``shard_map`` over
+    ``axis_name`` (the clique mesh axis).
+
+    Each device holds one cache partition ``shard`` (R, D) and one batch's
+    routing request ``owner``/``local_slot`` (n,) — per requested row, the
+    clique-local device owning it and the row within that owner's shard
+    (``CliqueCache.shard_routing``); ``owner < 0`` marks a host-fill miss.
+
+    The exchange is the all-gather/psum form of Legion's peer-to-peer
+    gather: every device all-gathers the clique's requests, serves the
+    rows *it* owns from its local shard (local hits and peer hits alike
+    run the same single-shard gather — the Pallas kernel on TPU), and one
+    ``psum`` routes each row back to its requester; rows nobody owns
+    (misses) come back zero for the host-fill overlay.  Returns (n, D):
+    this device's requested rows.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown routed_gather impl {impl!r}")
+    me = jax.lax.axis_index(axis_name)
+    owner_all = jax.lax.all_gather(owner, axis_name)        # (k, n)
+    local_all = jax.lax.all_gather(local_slot, axis_name)   # (k, n)
+    k, n = owner_all.shape
+    idx = jnp.where(owner_all == me, local_all, -1).reshape(-1)
+    if impl == "pallas":
+        rows = gather_rows_pallas(shard, idx, interpret=interpret)
+    else:
+        from repro.kernels import ref
+
+        rows = ref.gather_rows(shard, idx.astype(jnp.int32))
+    rows = rows.reshape(k, n, shard.shape[1])
+    rows = jax.lax.psum(rows, axis_name)
+    return rows[me]

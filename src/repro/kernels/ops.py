@@ -9,11 +9,10 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gather import gather_rows_pallas
+from repro.kernels.gather import gather_rows_pallas, routed_gather
 from repro.kernels.sage_agg import sage_aggregate_pallas
 from repro.kernels.scatter import scatter_rows_pallas
 
@@ -46,4 +45,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 __all__ = ["gather_rows", "scatter_rows", "sage_aggregate",
-           "flash_attention", "ref"]
+           "flash_attention", "routed_gather", "ref"]

@@ -25,6 +25,18 @@ def scatter_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array
     return out[:N]
 
 
+def routed_gather_dense(shards: jax.Array, owner: jax.Array,
+                        local_slot: jax.Array) -> jax.Array:
+    """Single-device oracle for ``gather.routed_gather``: given the full
+    shard stack (k, R, D) and per-requester routing (k, n), returns
+    (k, n, D) with out[g, i] = shards[owner[g, i], local_slot[g, i]]
+    (zeros where owner < 0 — host-fill misses)."""
+    safe_o = jnp.maximum(owner, 0)
+    safe_l = jnp.maximum(local_slot, 0)
+    out = shards[safe_o, safe_l]
+    return jnp.where((owner >= 0)[..., None], out, 0).astype(shards.dtype)
+
+
 def sage_aggregate(table: jax.Array, idx: jax.Array, weights: jax.Array):
     """Fused gather + weighted sum: out[b] = sum_f w[b,f] * table[idx[b,f]].
 

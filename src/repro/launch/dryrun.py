@@ -71,7 +71,7 @@ def parse_collectives(hlo_text: str) -> dict:
 def model_flops_estimate(cfg, shape) -> dict:
     """MODEL_FLOPS = 6 * N * D (N_active for MoE), N excluding embeddings."""
     from repro.models import get_module
-    from repro.models.params import Def, is_def
+    from repro.models.params import is_def
     import jax
 
     defs = get_module(cfg).defs(cfg)
@@ -235,7 +235,7 @@ def main():
 
     cells = []
     for arch in ARCH_IDS:
-        cfg = get_config(arch)
+        get_config(arch)  # validates the arch id
         for shape in SHAPES:  # non-applicable cells produce skip records
             for m in meshes:
                 cells.append((arch, shape, m))

@@ -14,9 +14,7 @@ Conventions (per-device, since SPMD HLO has local shapes):
 """
 from __future__ import annotations
 
-import math
 import re
-from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,

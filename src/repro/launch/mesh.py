@@ -1,16 +1,43 @@
-"""Production mesh construction.
+"""Production mesh construction + the clique execution mesh.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
 ("data", "model"); the multi-pod mesh adds a leading "pod" axis: 2 pods =
 512 chips, pure data parallelism across the DCN-connected pods.
+
+``make_clique_mesh`` builds the 1-D mesh the clique-parallel GNN executor
+runs on: one mesh position per device of one NVLink/ICI clique, axis name
+``"clique"``.  Cache shard views are laid out along this axis and the
+routed gather / gradient psum reduce over it.  On CPU the clique is
+simulated by launching with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax import.
+
+Everything here works on both the legacy (``jax.experimental.shard_map``,
+jax 0.4.x) and the current (``jax.shard_map`` / ``AxisType``) APIs —
+``shard_map_compat`` picks whichever the installed jax provides, which is
+what lets the CI matrix span the pinned-min and latest jax releases.
 """
 from __future__ import annotations
 
 import math
+from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - legacy jax
+    AxisType = None
+
+CLIQUE_AXIS = "clique"
+
+
+def _axis_types(n: int) -> dict:
+    """kwargs for Mesh(): Auto axis types where the API supports them."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -27,7 +54,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     import numpy as np
 
     dev_array = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev_array, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return Mesh(dev_array, axes, **_axis_types(len(axes)))
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
@@ -36,4 +63,54 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
 
     n = math.prod(shape)
     dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev_array, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return Mesh(dev_array, axes, **_axis_types(len(axes)))
+
+
+def make_clique_mesh(n_devices: Optional[int] = None,
+                     axis_name: str = CLIQUE_AXIS,
+                     devices: Optional[Sequence] = None) -> Mesh:
+    """1-D mesh over the devices of one interconnect clique.
+
+    ``devices`` pins specific jax devices (in clique-local order);
+    otherwise the first ``n_devices`` of ``jax.devices()`` are used.  The
+    sharded trainer lays the stacked cache shards, batch parts, and routed
+    gather outputs along this single axis, so position ``g`` of every
+    sharded array lives on the clique-local device ``g`` that owns cache
+    partition ``g``.
+    """
+    import numpy as np
+
+    if devices is None:
+        avail = jax.devices()
+        n = len(avail) if n_devices is None else n_devices
+        if len(avail) < n:
+            raise RuntimeError(
+                f"make_clique_mesh: need {n} devices, have {len(avail)}. "
+                "Simulate a clique on CPU with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n} (set before "
+                "importing jax).")
+        devices = avail[:n]
+    dev_array = np.asarray(list(devices))
+    return Mesh(dev_array, (axis_name,), **_axis_types(1))
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax generations.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (``check_rep``).  Replication checking is disabled on both paths: the
+    clique executor's out-specs mix sharded (batch) and replicated
+    (psum-reduced grads) outputs, which the static checkers reject.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:  # pragma: no cover - transitional releases
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)

@@ -8,7 +8,7 @@ for the big state pytrees so GSPMD can't silently reshard caches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, get_module, ssm_lm, transformer
-from repro.models.params import Def, specs_from_defs
+from repro.models.params import specs_from_defs
 from repro.models.sharding import Distribution, default_rules
 from repro.train.optimizer import adamw, apply_updates
 
@@ -47,7 +47,9 @@ def shape_rules(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
 def _token_specs(cfg, shape, dist: Distribution, with_labels=True):
     B, S = shape.global_batch, shape.seq_len
     mesh = dist.mesh
-    sh = lambda *ax: (NamedSharding(mesh, dist.spec(*ax)) if mesh else None)
+
+    def sh(*ax):
+        return NamedSharding(mesh, dist.spec(*ax)) if mesh else None
 
     def sds(shp, dt, *ax):
         if mesh is None:

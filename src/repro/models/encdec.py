@@ -8,7 +8,6 @@ cross-attn KV (computed once from the encoder output, read every step).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ W (mean(h ∪ N(h)))  (GCN); hidden dim 256, 2 layers as in the paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp

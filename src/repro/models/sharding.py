@@ -21,7 +21,7 @@ Logical activation/parameter axes used across the model zoo:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding

@@ -8,7 +8,6 @@ stay sharded along their sequence axis (see layers.dist_decode_attention).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

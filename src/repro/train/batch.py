@@ -30,6 +30,14 @@ host generator's draws) and share one accounting implementation
 (``CliqueCache.account_feature_gather`` / ``sample_accounting``), so for a
 given seed they produce bit-identical batches and identical hit/miss
 counts — `tests/test_batch.py` pins this.
+
+A third backend, ``ShardedBatchBuilder`` (``backend="sharded"``), keeps
+the device backend's host phase (and therefore its specs and accounting)
+but adds per-id ownership routing so the clique-parallel executor can
+finalize the whole clique jointly under ``shard_map``: local hits gather
+from the requester's own cache partition, peer hits ride the intra-clique
+exchange, and only true misses are host-filled
+(``tests/test_sharded.py`` pins three-way parity).
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ from repro.graph.csr import CSRGraph
 from repro.graph.sampling import (cache_sample_batch, host_sample_batch,
                                   unique_vertices)
 
-BACKENDS = ("host", "device")
+BACKENDS = ("host", "device", "sharded")
 
 
 @dataclasses.dataclass
@@ -64,6 +72,11 @@ class BatchSpec:
     # from the matching (possibly previous) device buffer, so an online
     # refresh racing the prefetch queue can never misroute cached rows
     cache_epoch: int = 0
+    # sharded backend: ownership routing per id — clique-local owning
+    # device and row within the owner's shard (-1 on miss), read off
+    # CliqueCache.shard_routing at spec-build time
+    owner: Optional[np.ndarray] = None
+    local_slot: Optional[np.ndarray] = None
 
 
 def _level_positions(ids: np.ndarray, levels: List[np.ndarray]) -> List[np.ndarray]:
@@ -227,6 +240,89 @@ class DeviceBatchBuilder(BatchBuilder):
         return batch
 
 
+class ShardedBatchBuilder(DeviceBatchBuilder):
+    """Spec builder for the clique-parallel (``shard_map``) executor.
+
+    The host phase is the device backend's (same sampler replay, same
+    hit/miss split, same accounting — bit-identical specs), plus the
+    ownership routing read off ``CliqueCache.shard_routing``: per cached
+    id, which clique device's shard holds the row and at which local slot.
+    The *joint* finalize — routed gather across the clique, miss overlay,
+    per-clique psum — lives in the train loop's sharded step;
+    ``pack_sharded_specs`` stacks one spec per clique device into the
+    mesh-ready arrays it consumes.  Calling ``finalize`` on this builder
+    directly falls back to the single-device gather (identical rows), so
+    spec-level tooling keeps working without a mesh.
+    """
+
+    backend = "sharded"
+
+    def build_spec(self, seeds, rng):
+        spec = super().build_spec(seeds, rng)
+        owner, local = self.cache.shard_routing()
+        if len(owner) == 0:  # empty feature cache: every id is a host fill
+            spec.owner = np.full(len(spec.ids), -1, dtype=np.int32)
+            spec.local_slot = np.zeros(len(spec.ids), dtype=np.int32)
+            return spec
+        # materialize the shard stack *here*, on the prefetch worker —
+        # serialized with refresh hooks — so the consumer-thread finalize
+        # only ever sees epoch-pinned buffers (the same invariant the flat
+        # device_arrays path gets from its spec-build-time use)
+        self.cache.sharded_device_arrays()
+        safe = np.maximum(spec.cache_pos, 0)
+        spec.owner = np.where(spec.hit, owner[safe], -1).astype(np.int32)
+        spec.local_slot = np.where(spec.hit, local[safe], -1).astype(np.int32)
+        return spec
+
+
+def pack_sharded_specs(specs: Sequence[BatchSpec], feat_dim: int,
+                       bucket: int = 256) -> Dict[str, np.ndarray]:
+    """Stack one ``ShardedBatchBuilder`` spec per clique device into the
+    arrays the sharded train step shards over the clique mesh axis
+    (leading axis = clique-local device).
+
+    Unique-id counts differ per device, so ids pad to the bucket-rounded
+    clique max (bounding jit retraces to one per bucket).  Padded tail
+    entries route as misses with zero fill rows and are never referenced
+    by any level position.  Returns::
+
+        owner      (k, n_pad) int32   routing: owning device, -1 = miss/pad
+        local      (k, n_pad) int32   row within the owner's shard
+        miss_rows  (k, n_pad, D) f32  host-fetched rows at miss slots, else 0
+        labels     (k, B) int32
+        pos_{l}    (k, prod(level_l shape)) int32  positions into ids
+        valid_{l}  (k, *level_l shape) bool        lvl >= 0
+        cache_epoch ()                uniform across the clique (asserted)
+    """
+    k = len(specs)
+    epochs = {s.cache_epoch for s in specs}
+    if len(epochs) != 1:
+        raise ValueError(f"pack_sharded_specs: specs span cache epochs "
+                         f"{sorted(epochs)}; one synchronized step must "
+                         "gather from one refresh generation")
+    n_pad = max(max(len(s.ids) for s in specs), 1)
+    n_pad = -(-n_pad // bucket) * bucket
+    owner = np.full((k, n_pad), -1, dtype=np.int32)
+    local = np.zeros((k, n_pad), dtype=np.int32)
+    miss_rows = np.zeros((k, n_pad, feat_dim), dtype=np.float32)
+    for gi, s in enumerate(specs):
+        n = len(s.ids)
+        owner[gi, :n] = s.owner
+        local[gi, :n] = np.maximum(s.local_slot, 0)
+        if s.miss_feats is not None and len(s.miss_feats):
+            miss_rows[gi, np.flatnonzero(~s.hit)] = s.miss_feats
+    packed = {"owner": owner, "local": local, "miss_rows": miss_rows,
+              "labels": np.stack([s.labels for s in specs])}
+    n_levels = len(specs[0].levels)
+    for li in range(n_levels):
+        packed[f"pos_{li}"] = np.stack(
+            [s.level_pos[li].reshape(-1).astype(np.int32) for s in specs])
+        packed[f"valid_{li}"] = np.stack(
+            [s.levels[li] >= 0 for s in specs])
+    packed["cache_epoch"] = specs[0].cache_epoch
+    return packed
+
+
 def make_batch_builder(backend: str, g: CSRGraph,
                        cache: Optional[CliqueCache],
                        fanouts: Sequence[int],
@@ -236,5 +332,7 @@ def make_batch_builder(backend: str, g: CSRGraph,
         return HostBatchBuilder(g, cache, fanouts, counter, dev, **kw)
     if backend == "device":
         return DeviceBatchBuilder(g, cache, fanouts, counter, dev, **kw)
+    if backend == "sharded":
+        return ShardedBatchBuilder(g, cache, fanouts, counter, dev, **kw)
     raise ValueError(f"unknown batch backend {backend!r} (expected one of "
                      f"{BACKENDS})")

@@ -9,7 +9,6 @@ where DCN bandwidth is the scarce resource.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +28,11 @@ import numpy as np
 from repro.core.planner import LegionPlan
 from repro.core.unified_cache import TrafficCounter
 from repro.graph.csr import CSRGraph
-from repro.models.gnn import GNNConfig, defs as gnn_defs, loss_fn as gnn_loss
+from repro.models.gnn import (GNNConfig, defs as gnn_defs,
+                              forward as gnn_forward, loss_fn as gnn_loss)
 from repro.models.params import init_from_defs
-from repro.train.batch import HostBatchBuilder, make_batch_builder
+from repro.train.batch import (HostBatchBuilder, make_batch_builder,
+                               pack_sharded_specs)
 from repro.train.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
 from repro.train.optimizer import adamw, apply_updates
 from repro.train.pipeline import Prefetcher, StragglerMonitor
@@ -44,6 +46,73 @@ def make_gnn_batch(g: CSRGraph, cache, cfg: GNNConfig, seeds: np.ndarray,
     Back-compat shim over ``HostBatchBuilder`` (returns numpy, not jnp)."""
     builder = HostBatchBuilder(g, cache, cfg.fanouts, counter, dev)
     return builder.assemble(builder.build_spec(seeds, rng))
+
+
+def _make_sharded_step(cfg: GNNConfig, opt, mesh, axis: str, n_total: int,
+                       feat_dim: int, impl: str):
+    """Build the jitted clique-parallel train step.
+
+    One ``shard_map`` over the clique axis does the whole device phase:
+    routed cache gather (local hits from the device's own partition, peer
+    hits via the intra-clique exchange), host-miss overlay, batch
+    assembly, per-shard loss/grad, and the per-clique ``psum`` that
+    combines gradients.  Per-shard losses are summed (not averaged) and
+    normalized by the clique-wide batch size after the psum, so the math
+    matches the single-device backends' mean over the concatenated batch
+    exactly.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.gather import routed_gather
+    from repro.launch.mesh import shard_map_compat
+
+    D = feat_dim
+
+    def body(params, shards, packed):
+        shard = shards[0]                      # (R, Dp): my cache partition
+        if shard.shape[0] == 0:                # empty cache: all host fill
+            feats = packed["miss_rows"][0]
+        else:
+            feats = routed_gather(shard, packed["owner"][0],
+                                  packed["local"][0], axis, impl=impl)
+            feats = feats[:, :D] + packed["miss_rows"][0]
+        batch = {"labels": packed["labels"][0]}
+        li = 0
+        while f"pos_{li}" in packed:
+            valid = packed[f"valid_{li}"][0]
+            f = feats[packed[f"pos_{li}"][0]].reshape(valid.shape + (D,))
+            batch[f"feats_{li}"] = f * valid[..., None].astype(f.dtype)
+            if li > 0:
+                batch[f"mask_{li}"] = valid
+            li += 1
+
+        def local_sum_loss(p):
+            logits = gnn_forward(cfg, p, batch).astype(jnp.float32)
+            labels = batch["labels"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+            acc = (logits.argmax(-1) == labels).astype(jnp.float32).sum()
+            return (lse - ll).sum(), acc
+
+        (loss_sum, acc_sum), grads = jax.value_and_grad(
+            local_sum_loss, has_aux=True)(params)
+        loss = jax.lax.psum(loss_sum, axis) / n_total
+        acc = jax.lax.psum(acc_sum, axis) / n_total
+        grads = jax.tree.map(lambda x: x / n_total,
+                             jax.lax.psum(grads, axis))
+        return grads, loss, acc
+
+    smapped = shard_map_compat(body, mesh, in_specs=(P(), P(axis), P(axis)),
+                               out_specs=(P(), P(), P()))
+
+    @jax.jit
+    def step(params, opt_state, shards, packed):
+        grads, loss, acc = smapped(params, shards, packed)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, acc
+
+    return step
 
 
 @dataclasses.dataclass
@@ -77,6 +146,14 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     against the HBM-resident unified cache (``gather`` picks the cached-row
     gather impl: auto|pallas|xla) with the host filling only misses, and
     overlaps the device-side gather with the previous train step.
+    ``"sharded"`` is the clique-parallel executor: ``devices`` must span
+    exactly one NVLink/ICI clique, each mesh device holds its own cache
+    partition (``CliqueCache.sharded_device_arrays``), batch gathers are
+    routed by the ownership map under ``shard_map`` (local-hit gather on
+    the owning device, intra-clique peer exchange, host fill only for
+    true misses), and gradients combine with one per-clique ``psum``.
+    It needs ``len(jax.devices()) >= len(devices)`` — simulate on CPU
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
     ``refresh_interval`` (steps) enables the online cache manager: live
     per-vertex traffic is accumulated, drift against the planned hotness is
@@ -93,6 +170,29 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     """
     if devices is None:
         devices = sorted(plan.partition.tablets) if plan is not None else [0]
+    # the device/sharded backends need a unified cache; planless runs
+    # degrade to the host pipeline (nothing device-resident to gather
+    # from) and the result reports the backend that actually ran
+    backend = backend if plan is not None else "host"
+    if backend == "sharded":
+        if mesh is not None or compress_grads:
+            raise ValueError(
+                "backend='sharded' builds its own clique mesh and combines "
+                "gradients with a per-clique psum; it does not compose "
+                "with mesh=/compress_grads= (use backend='device' for the "
+                "DP-mesh path)")
+        cliques = {plan.partition.clique_of_device(d) for d in devices}
+        if len(cliques) != 1:
+            raise ValueError(
+                f"backend='sharded' executes one NVLink/ICI clique; devices "
+                f"{list(devices)} span cliques {sorted(cliques)}")
+        clique_devs = list(plan.partition.cliques[next(iter(cliques))])
+        if set(devices) != set(clique_devs):
+            raise ValueError(
+                f"backend='sharded' needs every device of the clique (cache "
+                f"partitions cover all of {clique_devs}; got {list(devices)})")
+        # clique-local order == shard stacking order == mesh position
+        devices = clique_devs
     n_dev = len(devices)
     per_dev = max(cfg.batch_size // max(n_dev, 1), 16)
     counter = counter if counter is not None else TrafficCounter.for_devices(devices)
@@ -151,10 +251,6 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                   else all_train)
         streams[d] = tablet
 
-    # the device backend needs a unified cache; planless runs degrade to
-    # the host pipeline (nothing device-resident to gather from) and the
-    # result reports the backend that actually ran
-    backend = backend if plan is not None else "host"
     manager = None
     if plan is not None and (refresh_interval is not None
                              or refresh_config is not None):
@@ -173,11 +269,22 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     builders = {}
     for d in devices:
         cache = plan.cache_for_device(d) if plan is not None else None
-        kw = {"gather": gather} if backend == "device" else {}
+        kw = {"gather": gather} if backend in ("device", "sharded") else {}
         if manager is not None:
             kw["observer"] = manager.observer_for(d)
         builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
                                          counter, d, **kw)
+
+    sharded_step = None
+    clique_cache = None
+    if backend == "sharded":
+        from repro.launch.mesh import CLIQUE_AXIS, make_clique_mesh
+
+        clique_cache = plan.cache_for_device(devices[0])
+        clique_mesh = make_clique_mesh(n_dev)
+        sharded_step = _make_sharded_step(
+            cfg, opt, clique_mesh, CLIQUE_AXIS, n_total=per_dev * n_dev,
+            feat_dim=g.feat_dim, impl=builders[devices[0]].gather)
 
     def spec_fn(step: int) -> list:
         """Host phase of one *synchronized* step: per-device batch specs."""
@@ -189,11 +296,19 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             out.append(builders[d].build_spec(seeds, rng))
         return out
 
-    def finalize_batch(specs: list) -> dict:
+    def finalize_batch(item):
         """Device phase: finalize every part and concatenate (==DP).  Runs
         on the consumer thread; with the device backend the cache gather is
-        dispatched asynchronously and overlaps the in-flight train step."""
-        parts = [builders[d].finalize(s) for d, s in zip(devices, specs)]
+        dispatched asynchronously and overlaps the in-flight train step.
+        The sharded backend dequeues an already-packed clique batch (the
+        Prefetcher's pack_fn ran on the worker); here it only resolves the
+        epoch-pinned shard stack the packed slots index into."""
+        if backend == "sharded":
+            packed = dict(item)
+            epoch = packed.pop("cache_epoch")
+            shards = clique_cache.sharded_device_arrays(epoch)["feat_shards"]
+            return shards, packed
+        parts = [builders[d].finalize(s) for d, s in zip(devices, item)]
         if len(parts) == 1:
             return parts[0]
         return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
@@ -201,7 +316,10 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     prefetcher = Prefetcher(spec_fn, depth=prefetch_depth,
                             limit=max(steps - step0, 0),
                             pre_batch_hook=(manager.on_step
-                                            if manager is not None else None))
+                                            if manager is not None else None),
+                            pack_fn=((lambda specs: pack_sharded_specs(
+                                specs, g.feat_dim))
+                                if backend == "sharded" else None))
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
@@ -216,6 +334,10 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                 params, opt_state, ef_state, loss = train_step(
                     params, opt_state, ef_state, batch)
                 acc = jnp.zeros(())
+            elif backend == "sharded":
+                shards, packed = batch
+                params, opt_state, loss, acc = sharded_step(
+                    params, opt_state, shards, packed)
             else:
                 params, opt_state, loss, acc = train_step_plain(
                     params, opt_state, batch)

@@ -5,8 +5,7 @@ propagation (zeros_like), so optimizer state shards exactly like params.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,9 @@ def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
           eps: float = 1e-8, weight_decay: float = 0.01,
           grad_clip: float = 1.0) -> AdamW:
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),

@@ -17,13 +17,14 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Callable, Iterator, Optional
+from typing import Callable, Optional
 
 
 class Prefetcher:
     def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2,
                  limit: Optional[int] = None,
-                 pre_batch_hook: Optional[Callable[[int], None]] = None):
+                 pre_batch_hook: Optional[Callable[[int], None]] = None,
+                 pack_fn: Optional[Callable[[dict], dict]] = None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
@@ -34,14 +35,22 @@ class Prefetcher:
         before building batch ``step`` — serialized with ``batch_fn`` by
         construction, which is what lets the online cache manager mutate
         cache residency between (never during) spec builds without a lock.
-        Hook exceptions propagate exactly like batch_fn exceptions."""
+        Hook exceptions propagate exactly like batch_fn exceptions.
+
+        ``pack_fn`` is an optional second host phase applied to each
+        built batch on the worker thread (timed separately in
+        ``summary()``): the sharded executor packs per-device specs into
+        mesh-sharded arrays here, so the consumer thread dequeues batches
+        that are already in device-shardable layout."""
         self._batch_fn = batch_fn
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = 0
         self._limit = limit
         self._hook = pre_batch_hook
+        self._pack_fn = pack_fn
         self._build_s = 0.0
+        self._pack_s = 0.0
         self._built = 0
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._exc: Optional[BaseException] = None
@@ -58,6 +67,10 @@ class Prefetcher:
                 t0 = time.perf_counter()
                 batch = self._batch_fn(self._step)
                 self._build_s += time.perf_counter() - t0
+                if self._pack_fn is not None:
+                    t0 = time.perf_counter()
+                    batch = self._pack_fn(batch)
+                    self._pack_s += time.perf_counter() - t0
                 self._built += 1
                 self._step += 1
                 while not self._stop.is_set():
@@ -80,7 +93,9 @@ class Prefetcher:
         queue ran dry)."""
         return {"batches_built": self._built,
                 "host_build_s_total": self._build_s,
-                "host_build_s_mean": self._build_s / max(self._built, 1)}
+                "host_build_s_mean": self._build_s / max(self._built, 1),
+                "host_pack_s_total": self._pack_s,
+                "host_pack_s_mean": self._pack_s / max(self._built, 1)}
 
     def close(self):
         """Stop the worker.  A worker exception that was never surfaced via

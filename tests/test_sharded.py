@@ -1,0 +1,33 @@
+"""Clique-parallel (``backend="sharded"``) executor: routed-gather
+correctness, three-way backend parity (host/device/sharded), epoch-pinned
+shard stacks, and clique validation — see tests/_sharded_checks.py for the
+check bodies.
+
+Runs in-process when the interpreter already sees >= 4 devices (the CI
+``multidevice`` job sets ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+before pytest starts); otherwise spawns a subprocess that forces the device
+count itself, so the suite exercises the multi-device path even on a
+1-device local run.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+
+import _sharded_checks
+
+
+def test_sharded_suite():
+    if jax.device_count() >= _sharded_checks.N_DEV:
+        _sharded_checks.main()
+        return
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "_sharded_checks.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{_sharded_checks.N_DEV}")
+    r = subprocess.run([sys.executable, script, src], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL SHARDED OK" in r.stdout

@@ -34,8 +34,8 @@ def test_checkpoint_restart(setup):
     g, plan = setup
     cfg = GNNConfig(feat_dim=32, hidden=32, batch_size=64, fanouts=(4, 2))
     with tempfile.TemporaryDirectory() as d:
-        r1 = train_gnn(g, plan, cfg, steps=20, checkpoint_dir=d,
-                       checkpoint_every=10)
+        train_gnn(g, plan, cfg, steps=20, checkpoint_dir=d,
+                  checkpoint_every=10)
         r2 = train_gnn(g, plan, cfg, steps=30, checkpoint_dir=d, resume=True)
         assert r2.steps == 10  # resumed from step 20
 
