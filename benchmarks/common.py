@@ -20,6 +20,7 @@ repro.core (CLS=64B), identical to what the cost model optimizes.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 from typing import Dict, List
 
@@ -40,6 +41,25 @@ BATCH_BACKEND = os.environ.get("REPRO_BATCH_BACKEND", "host")
 
 # --smoke shrinks benchmark instances to CI scale (set by run.py)
 SMOKE = bool(int(os.environ.get("REPRO_BENCH_SMOKE", "0")))
+
+# where BENCH_*.json perf-trajectory files land (run.py --json-dir
+# overrides; CI uploads them as artifacts).  Default: the repo root, next
+# to the committed baselines.
+BENCH_JSON_DIR = os.environ.get(
+    "REPRO_BENCH_JSON_DIR",
+    os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Persist one benchmark's structured results as ``BENCH_<name>.json``
+    so the perf trajectory is recorded run over run (the committed copy is
+    the pre-change baseline the acceptance criteria compare against).
+    Returns the path written."""
+    path = os.path.join(BENCH_JSON_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def default_graph(n: int = 40_000, seed: int = 0, feat_dim: int = 100) -> CSRGraph:

@@ -307,14 +307,14 @@ def bench_batch_builder() -> List[tuple]:
 
     from repro.train.batch import make_batch_builder
 
-    g = default_graph(20_000)
+    g = default_graph(6_000 if common.SMOKE else 20_000)
     plan = build_plan(g, topology_matrix("nv2"),
                       mem_per_device=0.05 * g.n * g.feat_dim * S_FLOAT32,
                       batch_size=1024, seed=0)
     cache = plan.cache_for_device(0)
     tablet = plan.partition.tablets[0]
     rows = []
-    n_batches, bs = 8, 1024
+    n_batches, bs = (4, 256) if common.SMOKE else (8, 1024)
     for backend in ("host", "device"):
         builder = make_batch_builder(backend, g, cache, FANOUTS, None, 0)
         rng = np.random.default_rng(42)
@@ -332,9 +332,9 @@ def bench_batch_builder() -> List[tuple]:
             batch = builder.finalize(spec)
             jax.block_until_ready(batch)
             t_fin += time.perf_counter() - t0
-            total_rows += len(spec.ids)
+            total_rows += spec.n_ids or len(spec.ids)
             if spec.hit is not None:
-                hbm_rows += int(spec.hit.sum())
+                hbm_rows += int(spec.hit.sum())  # pad rows are False
         rows.append((f"batchbuild/{backend}/spec_us_per_batch",
                      t_spec / n_batches * 1e6, "host phase (prefetch thread)"))
         rows.append((f"batchbuild/{backend}/finalize_us_per_batch",
@@ -347,6 +347,135 @@ def bench_batch_builder() -> List[tuple]:
             rows.append(("batchbuild/device/hbm_resident_rows_frac",
                          hbm_rows / max(total_rows, 1),
                          "feature rows never crossing PCIe"))
+    return rows
+
+
+_COMPILE_TALLY = {"on": False, "n": 0}
+_COMPILE_LISTENER = False
+
+
+def _ensure_compile_listener():
+    """Process-wide XLA backend-compile tally (jax.monitoring has no
+    unregister, so one guarded listener with an on/off gate)."""
+    global _COMPILE_LISTENER
+    if not _COMPILE_LISTENER:
+        import jax
+
+        def _listener(event, _dur, **kw):
+            if (_COMPILE_TALLY["on"]
+                    and event.startswith("/jax/core/compile/backend_compile")):
+                _COMPILE_TALLY["n"] += 1
+
+        jax.monitoring.register_event_duration_secs_listener(_listener)
+        _COMPILE_LISTENER = True
+
+
+def bench_pipeline_stall() -> List[tuple]:
+    """Beyond-paper: the retrace-free fused device phase, before vs after.
+
+    Two end-to-end ``backend="device"`` runs over the identical instance
+    and seed stream:
+
+      before — the replaced pipeline: per-hop-sync sampler
+               (``sampler="stepwise"``), legacy finalize chain
+               (``fused=False``: gather dispatch, full-table ``.at[].set``
+               miss overlay, one ``take`` per level, exact per-batch
+               shapes ⇒ retraces nearly every batch) and a single-threaded
+               Prefetcher (``prefetch_workers=1``).
+      after  — bucketed specs + one-dispatch fused finalize + chained
+               sampler + the per-device build pool (the defaults).
+
+    Reported per arm: steps/s, host-build/pack seconds, queue-dry
+    (device-stall) seconds, and XLA backend-compile counts.  Parity is a
+    hard gate — both arms and a host-backend reference must produce
+    bit-identical losses and traffic accounting (a mismatch raises, which
+    CI turns into a failure; timing rows are advisory only).  Results land
+    in ``BENCH_pipeline.json`` (``common.write_bench_json``) so the perf
+    trajectory is recorded; the committed copy is the pre-change baseline.
+    """
+    import jax
+
+    from repro.train import batch as batch_mod
+
+    smoke = common.SMOKE
+    n = 6_000 if smoke else 20_000
+    steps = 24 if smoke else 60
+    bs = 256 if smoke else 1024
+    fanouts = (5, 3) if smoke else FANOUTS
+    g = powerlaw_graph(n, 10 if smoke else 25, seed=4, feat_dim=64)
+    plan = build_plan(g, topology_matrix("nv2"),
+                      mem_per_device=0.08 * g.n * g.feat_dim * S_FLOAT32,
+                      batch_size=bs, seed=0, fanouts=fanouts)
+    cfg = GNNConfig(feat_dim=64, hidden=32, batch_size=bs, fanouts=fanouts,
+                    lr=3e-3)
+    _ensure_compile_listener()
+
+    arms = [("before", dict(fused=False, sampler="stepwise",
+                            prefetch_workers=1)),
+            ("after", dict())]  # the defaults: fused + chain + build pool
+    metrics, results, counters = {}, {}, {}
+    for arm, kw in arms:
+        batch_mod._get_fused_finalize().clear_cache()
+        counter = TrafficCounter.for_plan(plan)
+        _COMPILE_TALLY["n"] = 0
+        _COMPILE_TALLY["on"] = True
+        t0 = time.perf_counter()
+        res = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=counter,
+                        backend="device", gather="xla", **kw)
+        wall = time.perf_counter() - t0
+        _COMPILE_TALLY["on"] = False
+        results[arm], counters[arm] = res, counter
+        metrics[arm] = {
+            "steps_per_s": steps / wall,
+            "wall_s": wall,
+            "host_build_s_mean": res.pipeline["host_build_s_mean"],
+            "host_build_s_total": res.pipeline["host_build_s_total"],
+            "queue_dry_s_total": res.pipeline["queue_dry_s_total"],
+            "queue_dry_s_mean": res.pipeline["queue_dry_s_mean"],
+            "build_workers": res.pipeline["build_workers"],
+            "xla_compiles": _COMPILE_TALLY["n"],
+            "finalize_variants": batch_mod._get_fused_finalize()._cache_size(),
+        }
+
+    # parity gate: before == after == host, bitwise, losses and traffic
+    host_counter = TrafficCounter.for_plan(plan)
+    res_h = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=host_counter,
+                      backend="host")
+    np.testing.assert_array_equal(results["before"].losses,
+                                  results["after"].losses,
+                                  err_msg="before/after loss divergence")
+    np.testing.assert_array_equal(results["after"].losses, res_h.losses,
+                                  err_msg="device/host loss divergence")
+    for a, b in ((counters["before"], counters["after"]),
+                 (counters["after"], host_counter)):
+        for f in ("feature_requests", "feature_hits", "topo_requests",
+                  "topo_hits", "pcie_transactions"):
+            assert getattr(a, f) == getattr(b, f), f
+        np.testing.assert_array_equal(a.bytes_matrix, b.bytes_matrix)
+
+    payload = {"smoke": smoke, "steps": steps, "batch_size": bs,
+               "n_vertices": n, "fanouts": list(fanouts),
+               "backend": jax.default_backend(), **{
+                   arm: metrics[arm] for arm, _ in arms}}
+    path = common.write_bench_json("pipeline", payload)
+
+    rows = [("pipeline_stall/parity", 1, "before==after==host, bitwise")]
+    for arm, _ in arms:
+        m = metrics[arm]
+        rows += [
+            (f"pipeline_stall/{arm}/steps_per_s", m["steps_per_s"],
+             f"workers={m['build_workers']}"),
+            (f"pipeline_stall/{arm}/host_build_s_mean",
+             m["host_build_s_mean"], "spec build (prefetch pool)"),
+            (f"pipeline_stall/{arm}/queue_dry_s_total",
+             m["queue_dry_s_total"], "device-stall time"),
+            (f"pipeline_stall/{arm}/xla_compiles", m["xla_compiles"],
+             f"finalize_variants={m['finalize_variants']}"),
+        ]
+    rows.append(("pipeline_stall/compile_reduction",
+                 metrics["before"]["xla_compiles"]
+                 / max(metrics["after"]["xla_compiles"], 1),
+                 f"json={path}"))
     return rows
 
 
@@ -461,6 +590,7 @@ ALL_BENCHES = [
     ("table3_partition_cost", table3_partition_cost),
     ("planner_comparison", bench_planner_comparison),
     ("batch_builder", bench_batch_builder),
+    ("pipeline_stall", bench_pipeline_stall),
     ("cache_refresh", bench_cache_refresh),
     ("clique_scaling", bench_clique_scaling),
 ]

@@ -6,7 +6,11 @@ wall time per measured unit; each figure's metric rows follow as
 
 ``--backend {host,device}`` selects the batch pipeline the training
 benchmarks run through (see repro.train.batch); ``--only SUBSTR`` filters
-benchmarks by name.
+benchmarks by name.  Benchmarks with structured results (``pipeline_stall``)
+additionally write ``BENCH_<name>.json`` next to the repo root — or into
+``--json-dir`` — so the perf trajectory is recorded run over run; parity
+failures inside a benchmark surface as ``ERROR`` rows (what CI gates on),
+while timings stay advisory.
 """
 from __future__ import annotations
 
@@ -33,9 +37,14 @@ def main() -> None:
                     help="run exactly one benchmark by name (see ALL_BENCHES)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI scale: shrink benchmark instances")
+    ap.add_argument("--json-dir", default="",
+                    help="directory for BENCH_*.json result files "
+                         "(default: repo root)")
     args = ap.parse_args()
     common.BATCH_BACKEND = args.backend
     common.SMOKE = common.SMOKE or args.smoke
+    if args.json_dir:
+        common.BENCH_JSON_DIR = args.json_dir
     if args.bench and args.bench not in {n for n, _ in ALL_BENCHES}:
         raise SystemExit(f"unknown benchmark {args.bench!r}; choose from "
                          f"{sorted(n for n, _ in ALL_BENCHES)}")

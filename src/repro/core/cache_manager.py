@@ -36,6 +36,7 @@ consumer thread only ever touches epoch-pinned device arrays.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -96,12 +97,19 @@ class AccessAccumulator:
         self.H_F = np.zeros((k_g, n), dtype=np.int64)
         self.tsum = 0
         self.batches = 0
+        # several devices of one clique share this accumulator, and the
+        # Prefetcher build pool can run their observers concurrently: the
+        # per-device H_T[gi]/H_F[gi] rows are disjoint, but the clique-wide
+        # tsum/batches tallies need the lock (adds commute, so totals stay
+        # bit-identical to the serial build order)
+        self._lock = threading.Lock()
 
     def record(self, g: CSRGraph, gi: int, levels: Sequence[np.ndarray],
                fanouts: Sequence[int]) -> None:
-        self.tsum += accumulate_batch(g, self.H_T[gi], self.H_F[gi],
-                                      levels, fanouts)
-        self.batches += 1
+        t = accumulate_batch(g, self.H_T[gi], self.H_F[gi], levels, fanouts)
+        with self._lock:
+            self.tsum += t
+            self.batches += 1
 
     def reset(self) -> None:
         self.H_T[:] = 0

@@ -16,6 +16,7 @@ benchmarks read out.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -34,6 +35,11 @@ class TrafficCounter:
     feature_hits: int = 0
     topo_requests: int = 0
     topo_hits: int = 0
+    # guards the scalar tallies when several prefetch workers account
+    # concurrently (integer adds commute, so totals stay bit-identical
+    # regardless of build interleaving; the lock only prevents lost updates)
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def __post_init__(self):
         if self.bytes_matrix is None:
@@ -106,6 +112,11 @@ class CliqueCache:
         self._prev_sharded_arrays = None
         self._shard_routing = None
         self._prev_epoch = -1
+        # guards the lazy materializations below: with the prefetch worker
+        # *pool*, several devices of one clique can race the first spec
+        # build.  Mutating refreshes never need it — the refresh hook is
+        # serialized with every build by the Prefetcher's step barrier.
+        self._mat_lock = threading.RLock()
 
     def _build_topology(self, topo_ids_per_dev: Sequence[np.ndarray]) -> None:
         """(Re)build the CSR-subset topology cache from per-device id lists."""
@@ -167,26 +178,29 @@ class CliqueCache:
         intervals must exceed the prefetch depth, which the manager
         enforces)."""
         if self._device_arrays is None:
-            import jax.numpy as jnp
+            with self._mat_lock:
+                if self._device_arrays is None:
+                    import jax.numpy as jnp
 
-            fc = self.feat_cache
-            D = fc.shape[1]
-            Dp = self._lane_padded(D)
-            if Dp != D:
-                fc = np.pad(fc, ((0, 0), (0, Dp - D)))
-            # feat_cache / feat_pos MUST be copies: on the CPU backend
-            # jnp.asarray zero-copy aliases aligned numpy buffers, and
-            # apply_feature_delta mutates those host mirrors in place —
-            # an aliased "retained" epoch would be silently rewritten.
-            # The topology arrays are replaced wholesale (never mutated),
-            # so aliasing them is safe.
-            self._device_arrays = {
-                "feat_cache": jnp.array(fc),
-                "feat_pos": jnp.array(self.feat_pos),
-                "cache_indptr": jnp.asarray(self.cache_indptr),
-                "cache_indices": jnp.asarray(self.cache_indices),
-                "topo_pos": jnp.asarray(self.topo_pos),
-            }
+                    fc = self.feat_cache
+                    D = fc.shape[1]
+                    Dp = self._lane_padded(D)
+                    if Dp != D:
+                        fc = np.pad(fc, ((0, 0), (0, Dp - D)))
+                    # feat_cache / feat_pos MUST be copies: on the CPU
+                    # backend jnp.asarray zero-copy aliases aligned numpy
+                    # buffers, and apply_feature_delta mutates those host
+                    # mirrors in place — an aliased "retained" epoch would
+                    # be silently rewritten.  The topology arrays are
+                    # replaced wholesale (never mutated), so aliasing them
+                    # is safe.
+                    self._device_arrays = {
+                        "feat_cache": jnp.array(fc),
+                        "feat_pos": jnp.array(self.feat_pos),
+                        "cache_indptr": jnp.asarray(self.cache_indptr),
+                        "cache_indices": jnp.asarray(self.cache_indices),
+                        "topo_pos": jnp.asarray(self.topo_pos),
+                    }
         return self._epoch_view(self._device_arrays,
                                 self._prev_device_arrays, epoch, "")
 
@@ -208,12 +222,14 @@ class CliqueCache:
         spec build on the prefetch hot path); ``apply_feature_delta``
         invalidates."""
         if self._shard_routing is None:
-            owner = self.feat_owner.astype(np.int32)
-            local = np.zeros(len(owner), dtype=np.int32)
-            for gi in range(len(self.devices)):
-                sel = np.flatnonzero(owner == gi)
-                local[sel] = np.arange(len(sel), dtype=np.int32)
-            self._shard_routing = (owner, local)
+            with self._mat_lock:
+                if self._shard_routing is None:
+                    owner = self.feat_owner.astype(np.int32)
+                    local = np.zeros(len(owner), dtype=np.int32)
+                    for gi in range(len(self.devices)):
+                        sel = np.flatnonzero(owner == gi)
+                        local[sel] = np.arange(len(sel), dtype=np.int32)
+                    self._shard_routing = (owner, local)
         return self._shard_routing
 
     def shard_row_count(self) -> int:
@@ -236,28 +252,32 @@ class CliqueCache:
         ``device_arrays``: specs built before an online refresh finalize
         against the shard stack they indexed."""
         if self._sharded_arrays is None:
-            import jax.numpy as jnp
+            with self._mat_lock:
+                if self._sharded_arrays is None:
+                    import jax.numpy as jnp
 
-            if self.feat_cache is None:
-                raise RuntimeError(
-                    "sharded_device_arrays needs a materialized cache "
-                    "(build the plan with materialize_caches=True)")
-            k_g = len(self.devices)
-            owner, local = self.shard_routing()
-            R = self.shard_row_count()
-            fc = self.feat_cache
-            D = fc.shape[1]
-            Dp = self._lane_padded(D)
-            shards = np.zeros((k_g, R, Dp), dtype=np.float32)
-            if len(owner):
-                shards[owner, local, :D] = fc
-            # jnp.array (copy): the numpy staging buffers are transient but
-            # owner/local derive from feat_owner, which refreshes mutate
-            self._sharded_arrays = {
-                "feat_shards": jnp.array(shards),
-                "slot_owner": jnp.array(owner),
-                "slot_local": jnp.array(local),
-            }
+                    if self.feat_cache is None:
+                        raise RuntimeError(
+                            "sharded_device_arrays needs a materialized "
+                            "cache (build the plan with "
+                            "materialize_caches=True)")
+                    k_g = len(self.devices)
+                    owner, local = self.shard_routing()
+                    R = self.shard_row_count()
+                    fc = self.feat_cache
+                    D = fc.shape[1]
+                    Dp = self._lane_padded(D)
+                    shards = np.zeros((k_g, R, Dp), dtype=np.float32)
+                    if len(owner):
+                        shards[owner, local, :D] = fc
+                    # jnp.array (copy): the numpy staging buffers are
+                    # transient but owner/local derive from feat_owner,
+                    # which refreshes mutate
+                    self._sharded_arrays = {
+                        "feat_shards": jnp.array(shards),
+                        "slot_owner": jnp.array(owner),
+                        "slot_local": jnp.array(local),
+                    }
         return self._epoch_view(self._sharded_arrays,
                                 self._prev_sharded_arrays, epoch,
                                 " in sharded form")
@@ -411,8 +431,17 @@ class CliqueCache:
         import jax
         import jax.numpy as jnp
 
+        # materialize before any early return: the first call happens at
+        # spec-build time on the prefetch worker (serialized with refresh
+        # hooks), and later refreshes rely on that — a lazy consumer-thread
+        # materialization could snapshot the host mirrors mid-mutation
         da = self.device_arrays()
         seeds = jnp.asarray(seeds, jnp.int32)
+        if len(self.cache_indices) == 0:
+            # empty topology cache: every row is a host fill (gathering
+            # from the zero-length adjacency array would be an XLA error)
+            return (jnp.full(seeds.shape + (fanout,), -1, jnp.int32),
+                    jnp.zeros(seeds.shape, bool))
         valid = seeds >= 0
         pos = da["topo_pos"][jnp.where(valid, seeds, 0)]
         hit = (pos >= 0) & valid
@@ -429,6 +458,35 @@ class CliqueCache:
         out = da["cache_indices"][idx].astype(jnp.int32)
         ok = hit & (deg > 0)
         return jnp.where(ok[:, None], out, -1), hit
+
+    def device_sample_chain(self, seeds, fanouts: Sequence[int],
+                            rands: Sequence[np.ndarray]):
+        """Enqueue every hop's device half back-to-back — *no host sync*.
+
+        Hop ``k`` samples directly from hop ``k-1``'s device output, so the
+        whole multi-hop chain dispatches before any result is read back
+        (one sync per batch instead of one per hop).  A frontier row whose
+        parent was a topology miss carries ``-1`` on device, so the child
+        row simply comes back as a miss too; the caller's single host
+        resolve pass (``graph.sampling.cache_sample_batch``) re-samples
+        exactly those rows from the host CSR with the same ``rands`` draws,
+        which keeps the composed levels bit-identical to the host sampler.
+
+        ``rands[k]`` must be the hop-``k`` draw of shape
+        ``(len(flattened frontier_k), fanouts[k])``.  Returns two lists of
+        *unmaterialized* jax arrays: per-hop neighbors (flat, fanout) and
+        per-hop device-hit masks.
+        """
+        import jax.numpy as jnp
+
+        outs, hits = [], []
+        frontier = jnp.asarray(np.asarray(seeds), jnp.int32)
+        for f, r in zip(fanouts, rands):
+            out, hit = self.device_sample_cached(frontier, f, rand=r)
+            outs.append(out)
+            hits.append(hit)
+            frontier = out.reshape(-1)
+        return outs, hits
 
     @property
     def feat_bytes(self) -> int:
@@ -459,20 +517,21 @@ class CliqueCache:
         n_miss = int((~hit).sum())
         row_bytes = self.g.feat_dim * S_FLOAT32
         tx_per_row = int(np.ceil(row_bytes / CLS))
-        counter.feature_requests += len(pos)
-        counter.feature_hits += int(hit.sum())
-        counter.pcie_transactions += tx_per_row * n_miss
-        counter.bytes_matrix[requester_dev, -1] += row_bytes * n_miss
-        if hit.any():
-            if max(self.devices) >= counter.n_devices:
-                raise ValueError(
-                    f"TrafficCounter(n_devices={counter.n_devices}) cannot "
-                    f"index clique devices {self.devices}; size it from the "
-                    "plan (TrafficCounter.for_plan / for_devices)")
-            owners = self.feat_owner[pos[hit]]
-            cnt = np.bincount(owners, minlength=len(self.devices))
-            np.add.at(counter.bytes_matrix[requester_dev],
-                      np.asarray(self.devices), row_bytes * cnt)
+        if hit.any() and max(self.devices) >= counter.n_devices:
+            raise ValueError(
+                f"TrafficCounter(n_devices={counter.n_devices}) cannot "
+                f"index clique devices {self.devices}; size it from the "
+                "plan (TrafficCounter.for_plan / for_devices)")
+        with counter.lock:
+            counter.feature_requests += len(pos)
+            counter.feature_hits += int(hit.sum())
+            counter.pcie_transactions += tx_per_row * n_miss
+            counter.bytes_matrix[requester_dev, -1] += row_bytes * n_miss
+            if hit.any():
+                owners = self.feat_owner[pos[hit]]
+                cnt = np.bincount(owners, minlength=len(self.devices))
+                np.add.at(counter.bytes_matrix[requester_dev],
+                          np.asarray(self.devices), row_bytes * cnt)
 
     def extract_features(self, ids: np.ndarray, requester_dev: int,
                          counter: Optional[TrafficCounter] = None) -> np.ndarray:
@@ -497,14 +556,17 @@ class CliqueCache:
         srcs = srcs[srcs >= 0]
         pos = self.topo_pos[srcs]
         hit = pos >= 0
-        counter.topo_requests += len(srcs)
-        counter.topo_hits += int(hit.sum())
         miss = srcs[~hit]
+        tx = n_bytes = 0
         if len(miss):
             deg = self.g.indptr[miss + 1] - self.g.indptr[miss]
-            tx = np.ceil(deg * S_UINT32 / CLS).astype(np.int64) + 1
-            counter.pcie_transactions += int(tx.sum())
-            counter.bytes_matrix[requester_dev, -1] += int((deg * S_UINT32).sum())
+            tx = int((np.ceil(deg * S_UINT32 / CLS).astype(np.int64) + 1).sum())
+            n_bytes = int((deg * S_UINT32).sum())
+        with counter.lock:
+            counter.topo_requests += len(srcs)
+            counter.topo_hits += int(hit.sum())
+            counter.pcie_transactions += tx
+            counter.bytes_matrix[requester_dev, -1] += n_bytes
 
 
 def plan_cache_contents(g: CSRGraph, k_g: int, cslp_res, cost_plan: dict,

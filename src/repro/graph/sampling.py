@@ -112,25 +112,71 @@ def cache_sample_level(g: CSRGraph, cache, seeds: np.ndarray, fanout: int,
 
 
 def cache_sample_batch(g: CSRGraph, cache, seeds: np.ndarray,
-                       fanouts: Sequence[int], rng: np.random.Generator
+                       fanouts: Sequence[int], rng: np.random.Generator,
+                       chain: bool = True
                        ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
     """Cache-aware multi-hop sample (device backend of the batch pipeline).
 
-    Same contract as ``host_sample_batch`` plus per-level topology hit
-    masks (flattened frontier order) for traffic accounting.  With an
-    identically-seeded ``rng`` the returned levels are bit-identical to the
-    host sampler's.
+    Same contract as ``host_sample_batch`` plus per-level device-hit masks
+    (flattened frontier order).  With an identically-seeded ``rng`` the
+    returned levels are bit-identical to the host sampler's.
+
+    ``chain=True`` (default) enqueues all hops' device halves back-to-back
+    (``CliqueCache.device_sample_chain``) and pays a *single* host sync per
+    batch; the host fallback then resolves hop by hop at the end.  A row is
+    device-resolved only if its topology was cached *and* its parent row
+    was itself device-resolved (a host-filled parent is a ``-1`` on
+    device); everything else replays the same random draws against the
+    host CSR, so the composed levels are bit-identical either way — only
+    the hit masks tighten (chained misses fall back to the host).
+    Per-level traffic accounting reads ``topo_pos`` directly
+    (``CliqueCache.sample_accounting``) and is unaffected by the masks.
+
+    ``chain=False`` is the legacy per-hop path (one device sync per hop via
+    ``cache_sample_level``) — kept as the reference for parity tests and
+    the ``pipeline_stall`` before/after benchmark.
     """
     levels = [np.asarray(seeds, dtype=np.int64)]
-    hits = []
+    hits: List[np.ndarray] = []
     frontier = levels[0]
     shape = (len(frontier),)
+    if not chain:
+        for f in fanouts:
+            nxt, hit = cache_sample_level(g, cache, frontier.reshape(-1), f,
+                                          rng)
+            hits.append(hit)
+            shape = shape + (f,)
+            levels.append(nxt.reshape(shape))
+            frontier = levels[-1]
+        return levels, hits
+    # phase 1 — draw each hop's randomness in host-sampler order and
+    # enqueue every device half without reading anything back
+    rands = []
+    n_flat = len(frontier)
     for f in fanouts:
-        nxt, hit = cache_sample_level(g, cache, frontier.reshape(-1), f, rng)
-        hits.append(hit)
+        rands.append(rng.integers(0, 1 << 31, size=(n_flat, f)))
+        n_flat *= f
+    dev_outs, dev_hits = cache.device_sample_chain(levels[0], fanouts, rands)
+    # phase 2 — one sync for the whole chain...
+    dev_outs = [np.asarray(o) for o in dev_outs]
+    dev_hits = [np.asarray(h) for h in dev_hits]
+    # ...then resolve hop by hop: rows the device could not serve (topo
+    # miss, negative seed, or stale parent) re-sample from the host CSR
+    # with the very draws the device half consumed
+    ok = np.ones(len(frontier), dtype=bool)  # frontier rows true on device
+    for k, f in enumerate(fanouts):
+        flat = frontier.reshape(-1)
+        resolved = dev_hits[k] & ok
+        out = dev_outs[k].astype(np.int64)
+        need = ~resolved
+        if need.any():
+            out[need] = host_sample_level(g, flat[need], f, rng,
+                                          rand=rands[k][need])
+        hits.append(resolved)
         shape = shape + (f,)
-        levels.append(nxt.reshape(shape))
+        levels.append(out.reshape(shape))
         frontier = levels[-1]
+        ok = np.repeat(resolved, f)
     return levels, hits
 
 

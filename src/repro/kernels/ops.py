@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_batch import fused_gather_overlay_pallas
 from repro.kernels.gather import gather_rows_pallas, routed_gather
 from repro.kernels.sage_agg import sage_aggregate_pallas
 from repro.kernels.scatter import scatter_rows_pallas
@@ -22,6 +23,14 @@ def gather_rows(table: jax.Array, idx: jax.Array, interpret: bool = None,
                 return_mask: bool = False):
     return gather_rows_pallas(table, idx, interpret=interpret,
                               return_mask=return_mask)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_gather_overlay(table: jax.Array, idx: jax.Array,
+                         miss_rows: jax.Array, miss_inv: jax.Array,
+                         interpret: bool = None):
+    return fused_gather_overlay_pallas(table, idx, miss_rows, miss_inv,
+                                       interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -45,4 +54,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 __all__ = ["gather_rows", "scatter_rows", "sage_aggregate",
-           "flash_attention", "routed_gather", "ref"]
+           "fused_gather_overlay", "flash_attention", "routed_gather", "ref"]

@@ -25,6 +25,19 @@ def scatter_rows(table: jax.Array, idx: jax.Array, rows: jax.Array) -> jax.Array
     return out[:N]
 
 
+def fused_gather_overlay(table: jax.Array, idx: jax.Array,
+                         miss_rows: jax.Array, miss_inv: jax.Array) -> jax.Array:
+    """Oracle for ``fused_batch.fused_gather_overlay_pallas``: one batch's
+    unique-vertex feature block from two sources in one pass —
+    ``out[i] = miss_rows[miss_inv[i]]`` where ``miss_inv[i] >= 0``, else
+    ``table[idx[i]]`` where ``idx[i] >= 0``, else zeros (bucket padding).
+    The two maps are disjoint by construction; miss wins on overlap."""
+    cached = gather_rows(table, idx)
+    fresh = miss_inv >= 0
+    staged = miss_rows[jnp.maximum(miss_inv, 0)].astype(table.dtype)
+    return jnp.where(fresh[:, None], staged, cached)
+
+
 def routed_gather_dense(shards: jax.Array, owner: jax.Array,
                         local_slot: jax.Array) -> jax.Array:
     """Single-device oracle for ``gather.routed_gather``: given the full

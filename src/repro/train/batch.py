@@ -16,20 +16,34 @@ Two interchangeable backends (paper §4.2/§5 vs the classic CPU pipeline)::
     HostBatchBuilder                     DeviceBatchBuilder
     ----------------                     ------------------
     sample: host CSR (numpy)             sample: HBM topology cache on
-                                           device; host fills only the
-                                           topo-miss rows
-    gather: numpy rows, hits from        gather: Pallas gather over the
-      the host copy of the cache           HBM feat cache; host fetches
-                                           only the miss rows, overlaid
-                                           on device
-    finalize: one host->device copy      finalize: device gather + small
-      of the full batch                    miss overlay copy
+                                           device (all hops enqueued
+                                           back-to-back, one sync); host
+                                           fills only the topo-miss rows
+    gather: numpy rows, hits from        gather: one fused jitted dispatch
+      the host copy of the cache           (kernels/fused_batch.py): cache
+                                           gather + miss overlay + level
+                                           positioning/masking
+    finalize: one host->device copy      finalize: fused device phase +
+      of the full batch                    small staged miss upload
 
 Both backends draw identical randomness (the device sampler replays the
 host generator's draws) and share one accounting implementation
 (``CliqueCache.account_feature_gather`` / ``sample_accounting``), so for a
 given seed they produce bit-identical batches and identical hit/miss
 counts — `tests/test_batch.py` pins this.
+
+Stable shapes (retrace-free finalize): the device spec's per-id layout is
+**bucket-rounded** — ``ids``/``cache_pos``/``hit``/``miss_inv`` pad to the
+next multiple of ``bucket`` (default 256), and miss rows stage into a
+bucket-rounded pinned staging buffer reused across batches (lane-padded to
+the cache table's width so no per-batch re-pad happens on device).  Every
+jitted finalize therefore sees one shape per (id-bucket, miss-bucket) pair
+and compiles **once per bucket instead of once per batch**; padded tail
+entries are inert (ids/cache_pos/miss_inv = -1, hit = False) and are never
+referenced by any level position.  ``tests/test_batch.py`` pins the
+retrace count.  The ``bucket`` knob trades padding waste (at most
+``bucket-1`` zero rows per batch) against compile count; the host backend
+is unpadded and compile-free by construction.
 
 A third backend, ``ShardedBatchBuilder`` (``backend="sharded"``), keeps
 the device backend's host phase (and therefore its specs and accounting)
@@ -42,7 +56,9 @@ exchange, and only true misses are host-filled
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,21 +69,40 @@ from repro.graph.sampling import (cache_sample_batch, host_sample_batch,
 
 BACKENDS = ("host", "device", "sharded")
 
+DEFAULT_BUCKET = 256  # id/miss shape quantum of the device spec layout
+
+
+def _round_bucket(n: int, bucket: int) -> int:
+    """Smallest positive multiple of ``bucket`` holding ``n`` rows."""
+    return max(-(-n // bucket), 1) * bucket
+
 
 @dataclasses.dataclass
 class BatchSpec:
     """Backend-agnostic description of one sampled mini-batch (numpy only;
-    crosses the Prefetcher thread boundary)."""
+    crosses the Prefetcher thread boundary).
+
+    Device/sharded specs use the bucket-rounded layout (see module doc):
+    ``ids``/``cache_pos``/``hit``/``miss_inv`` have length
+    ``_round_bucket(n_ids, bucket)`` with inert padding (-1 / False), and
+    ``miss_feats`` is a bucket-rounded staging buffer whose first
+    ``n_miss`` rows are real (width may exceed the graph's feature dim —
+    it is lane-padded to the cache table's device width).  Host specs are
+    unpadded (``n_ids == len(ids)``)."""
     labels: np.ndarray                  # (B,) int32
     levels: List[np.ndarray]            # padded level id tensors, -1 = pad
-    ids: np.ndarray                     # unique non-negative vertex ids
+    ids: np.ndarray                     # unique vertex ids (pad rows = -1)
     level_pos: List[np.ndarray]         # per-level position into ``ids``
     # host backend: fully materialized feature rows for ``ids``
     host_feats: Optional[np.ndarray] = None
-    # device backend: hit/miss split + host-fetched miss rows
+    # device backend: hit/miss split + host-staged miss rows
     cache_pos: Optional[np.ndarray] = None   # feat-cache slot per id (-1 miss)
-    hit: Optional[np.ndarray] = None         # (len(ids),) bool
-    miss_feats: Optional[np.ndarray] = None  # (n_miss, D) f32
+    hit: Optional[np.ndarray] = None         # (n_pad,) bool (pad rows False)
+    miss_feats: Optional[np.ndarray] = None  # (m_pad, >=D) f32 staging buffer
+    # row i's source row in miss_feats (-1 = cached or padding)
+    miss_inv: Optional[np.ndarray] = None
+    n_ids: int = 0                      # true unique-id count (<= len(ids))
+    n_miss: int = 0                     # true miss count (<= len(miss_feats))
     # cache refresh epoch this spec's slots index into: finalize gathers
     # from the matching (possibly previous) device buffer, so an online
     # refresh racing the prefetch queue can never misroute cached rows
@@ -79,12 +114,77 @@ class BatchSpec:
     local_slot: Optional[np.ndarray] = None
 
 
+class _StagingPool:
+    """Reusable host-side miss staging buffers, keyed by (rows, width).
+
+    The device spec stages its miss rows into one of these instead of
+    allocating a fresh array per batch — the CPU-pipeline analogue of a
+    pinned H2D staging area.  ``acquire`` hands out a zeroed-tail buffer;
+    the consumer releases it *after* copying to device (``jnp.array`` is a
+    guaranteed copy — on the CPU backend ``jnp.asarray`` may alias the
+    numpy memory, which would corrupt the in-flight batch on reuse).
+    Thread-safe: build runs on prefetch workers, release on the consumer.
+    """
+
+    def __init__(self):
+        self._free: Dict[Tuple[int, int], deque] = {}
+
+    def acquire(self, rows: int, width: int) -> np.ndarray:
+        q = self._free.setdefault((rows, width), deque())
+        try:
+            return q.pop()
+        except IndexError:
+            return np.zeros((rows, width), dtype=np.float32)
+
+    def release(self, buf: Optional[np.ndarray]) -> None:
+        if buf is not None:
+            self._free.setdefault(buf.shape, deque()).append(buf)
+
+
 def _level_positions(ids: np.ndarray, levels: List[np.ndarray]) -> List[np.ndarray]:
     out = []
     for lvl in levels:
         pos = np.searchsorted(ids, np.maximum(lvl, 0))
         out.append(np.clip(pos, 0, max(len(ids) - 1, 0)))
     return out
+
+
+_fused_finalize = None  # built on first use (keeps jax import lazy)
+
+
+def _get_fused_finalize():
+    """The whole device phase of one batch as ONE jitted dispatch: fused
+    cached-row gather + miss overlay (Pallas kernel or XLA oracle), then
+    per-level positioning and pad masking.  Static over the gather impl
+    and feature dim only — array shapes are bucket-stable, so this
+    compiles once per (id-bucket, miss-bucket) pair (`tests/test_batch.py`
+    counts via ``_fused_finalize._cache_size()``)."""
+    global _fused_finalize
+    if _fused_finalize is None:
+        import jax
+
+        @partial(jax.jit, static_argnames=("impl", "D"))
+        def fused_finalize(table, idx, miss_rows, miss_inv, labels, pos,
+                           valid, *, impl: str, D: int):
+            from repro.kernels import fused_batch, ref
+
+            feats = (fused_batch.fused_gather_overlay_pallas(
+                         table, idx, miss_rows, miss_inv)
+                     if impl == "pallas"
+                     else ref.fused_gather_overlay(table, idx, miss_rows,
+                                                   miss_inv))
+            if feats.shape[1] != D:
+                feats = feats[:, :D]
+            out = {"labels": labels}
+            for li, (p, v) in enumerate(zip(pos, valid)):
+                f = feats[p].reshape(v.shape + (D,))
+                out[f"feats_{li}"] = f * v[..., None].astype(f.dtype)
+                if li > 0:
+                    out[f"mask_{li}"] = v
+            return out
+
+        _fused_finalize = fused_finalize
+    return _fused_finalize
 
 
 class BatchBuilder:
@@ -115,6 +215,10 @@ class BatchBuilder:
     def finalize(self, spec: BatchSpec) -> Dict[str, "object"]:
         raise NotImplementedError
 
+    def release_spec(self, spec: BatchSpec) -> None:
+        """Return a spec's pooled resources without finalizing it (the
+        sharded pack path consumes specs on the worker thread)."""
+
     def build(self, seeds: np.ndarray, rng: np.random.Generator) -> Dict:
         """Convenience: both phases back to back (benchmarks, tests)."""
         return self.finalize(self.build_spec(seeds, rng))
@@ -129,7 +233,9 @@ class BatchBuilder:
 
 
 class HostBatchBuilder(BatchBuilder):
-    """The classic CPU pipeline: everything numpy, one H2D copy per batch."""
+    """The classic CPU pipeline: everything numpy, one H2D copy per batch.
+    No jit anywhere on this path — it stays compile-free by construction
+    (pinned by the retrace-count test)."""
 
     backend = "host"
 
@@ -141,7 +247,7 @@ class HostBatchBuilder(BatchBuilder):
                  if self.cache is not None else self.g.get_features(ids))
         return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
                          ids=ids, level_pos=_level_positions(ids, levels),
-                         host_feats=feats)
+                         host_feats=feats, n_ids=len(ids))
 
     @staticmethod
     def assemble(spec: BatchSpec) -> Dict[str, np.ndarray]:
@@ -166,16 +272,26 @@ class DeviceBatchBuilder(BatchBuilder):
     HBM-resident unified cache; the host only fills misses.
 
     ``gather`` picks the cached-row gather implementation:
-      * ``"pallas"`` — the Mosaic kernel (`gather_rows_pallas`); compiled on
-        TPU, interpreted elsewhere (slow off-TPU, but the real hot path).
-      * ``"xla"``    — the jnp oracle with identical semantics.
+      * ``"pallas"`` — the Mosaic kernels (`fused_batch` / `gather_rows`);
+        compiled on TPU, interpreted elsewhere (slow off-TPU, but the real
+        hot path).
+      * ``"xla"``    — the jnp oracles with identical semantics.
       * ``"auto"``   — pallas on TPU, xla otherwise (default).
+
+    ``bucket`` sets the shape quantum of the spec layout (see module doc);
+    ``fused=False`` falls back to the legacy finalize chain (separate
+    gather, full-table ``.at[].set`` miss overlay, one ``take`` per level,
+    all at exact per-batch shapes — retraces almost every batch) and is
+    kept as the ``pipeline_stall`` benchmark's *before* arm and as a
+    second parity oracle.  ``sampler="stepwise"`` likewise restores the
+    per-hop-sync sampling path (see ``cache_sample_batch``).
     """
 
     backend = "device"
 
     def __init__(self, g, cache, fanouts, counter=None, dev=0,
-                 gather: str = "auto", observer=None):
+                 gather: str = "auto", observer=None, fused: bool = True,
+                 bucket: int = DEFAULT_BUCKET, sampler: str = "chain"):
         if cache is None:
             raise ValueError("DeviceBatchBuilder needs a unified cache "
                              "(build a LegionPlan, or use backend='host')")
@@ -185,26 +301,91 @@ class DeviceBatchBuilder(BatchBuilder):
         if gather == "auto":
             import jax
             gather = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if sampler not in ("chain", "stepwise"):
+            raise ValueError(f"unknown sampler mode {sampler!r}")
+        if bucket < 1:
+            raise ValueError(f"bucket must be >= 1, got {bucket}")
         self.gather = gather
+        self.fused = fused
+        self.bucket = int(bucket)
+        self.sampler = sampler
+        self._staging = _StagingPool()
+
+    def _staging_width(self) -> int:
+        """Miss rows stage at the cache table's lane-padded device width so
+        the fused kernel sees one width for both sources (columns beyond
+        feat_dim stay zero for the buffer's lifetime)."""
+        return CliqueCache._lane_padded(self.g.feat_dim)
 
     def build_spec(self, seeds, rng):
-        levels, _topo_hits = cache_sample_batch(self.g, self.cache, seeds,
-                                                self.fanouts, rng)
+        levels, _topo_hits = cache_sample_batch(
+            self.g, self.cache, seeds, self.fanouts, rng,
+            chain=(self.sampler == "chain"))
         self._account_sampling(levels)
         ids = unique_vertices(levels)
         cache_pos, hit = self.cache.split_hits(ids)
         if self.counter is not None:
             self.cache.account_feature_gather(cache_pos, hit, self.dev,
                                               self.counter)
-        miss_feats = (self.g.get_features(ids[~hit]) if (~hit).any()
-                      else np.zeros((0, self.g.feat_dim), np.float32))
+        n_ids, n_miss = len(ids), int((~hit).sum())
+        level_pos = _level_positions(ids, levels)
+        # bucket-rounded layout: pad rows are inert (-1 / False) and never
+        # referenced by level_pos, so every downstream shape is stable
+        n_pad = _round_bucket(n_ids, self.bucket)
+        m_pad = _round_bucket(n_miss, self.bucket)
+        ids_p = np.full(n_pad, -1, dtype=np.int64)
+        ids_p[:n_ids] = ids
+        pos_p = np.full(n_pad, -1, dtype=np.int64)
+        pos_p[:n_ids] = cache_pos
+        hit_p = np.zeros(n_pad, dtype=bool)
+        hit_p[:n_ids] = hit
+        miss_inv = np.full(n_pad, -1, dtype=np.int32)
+        miss_inv[np.flatnonzero(~hit)] = np.arange(n_miss, dtype=np.int32)
+        staging = self._staging.acquire(m_pad, self._staging_width())
+        D = self.g.feat_dim
+        if n_miss:
+            staging[:n_miss, :D] = self.g.get_features(ids[~hit])
+        staging[n_miss:, :D] = 0.0
         return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
-                         ids=ids, level_pos=_level_positions(ids, levels),
-                         cache_pos=cache_pos, hit=hit, miss_feats=miss_feats,
+                         ids=ids_p, level_pos=level_pos,
+                         cache_pos=pos_p, hit=hit_p, miss_feats=staging,
+                         miss_inv=miss_inv, n_ids=n_ids, n_miss=n_miss,
                          cache_epoch=self.cache.epoch)
 
+    def release_spec(self, spec):
+        self._staging.release(spec.miss_feats)
+        spec.miss_feats = None
+
+    def _table(self, epoch: int):
+        """The epoch-pinned device feature table; a (1, Dp) zero dummy when
+        the plan cached nothing (every row then resolves as miss/pad)."""
+        import jax.numpy as jnp
+
+        if len(self.cache.feat_ids) == 0:
+            return jnp.zeros((1, self._staging_width()), jnp.float32)
+        return self.cache.device_arrays(epoch)["feat_cache"]
+
+    def finalize(self, spec):
+        if not self.fused:
+            return self._finalize_unfused(spec)
+        import jax.numpy as jnp
+
+        table = self._table(spec.cache_epoch)
+        # jnp.array = guaranteed copy: the staging buffer goes back to the
+        # pool right here, while the batch it fed is still in flight
+        miss = jnp.array(spec.miss_feats)
+        self.release_spec(spec)
+        idx = spec.cache_pos.astype(np.int32)  # -1 at miss AND pad rows
+        pos = tuple(np.ascontiguousarray(p.reshape(-1).astype(np.int32))
+                    for p in spec.level_pos)
+        valid = tuple(lvl >= 0 for lvl in spec.levels)
+        return _get_fused_finalize()(table, idx, miss, spec.miss_inv,
+                                     spec.labels, pos, valid,
+                                     impl=self.gather, D=self.g.feat_dim)
+
+    # -- legacy (pre-fused) finalize: the benchmark's *before* arm --------
     def _gather_cached(self, idx: np.ndarray, epoch: int):
-        """(n_ids,) slot ids (-1 = miss) -> (n_ids, D) rows, zeros at -1.
+        """(n,) slot ids (-1 = miss) -> (n, D) rows, zeros at -1.
         ``epoch`` selects the double-buffered table the slots index into."""
         import jax.numpy as jnp
 
@@ -219,19 +400,24 @@ class DeviceBatchBuilder(BatchBuilder):
                else ref.gather_rows(table, jidx))
         return out[:, :D] if table.shape[1] != D else out
 
-    def finalize(self, spec):
+    def _finalize_unfused(self, spec):
+        """The replaced chain — gather dispatch, full-table ``.at[].set``
+        miss overlay, then one ``take`` per level — at exact (unpadded)
+        shapes, so it retraces on nearly every batch."""
         import jax.numpy as jnp
 
-        idx = np.where(spec.hit, spec.cache_pos, -1)
+        n, D = spec.n_ids, self.g.feat_dim
+        idx = np.where(spec.hit[:n], spec.cache_pos[:n], -1)
         feats = self._gather_cached(idx, spec.cache_epoch)
-        miss_rows = np.flatnonzero(~spec.hit)
+        miss_rows = np.flatnonzero(spec.miss_inv[:n] >= 0)
         if len(miss_rows):
             feats = feats.at[jnp.asarray(miss_rows)].set(
-                jnp.asarray(spec.miss_feats))
+                jnp.array(spec.miss_feats[:spec.n_miss, :D]))
+        self.release_spec(spec)
         batch = {"labels": jnp.asarray(spec.labels)}
         for li, (lvl, pos) in enumerate(zip(spec.levels, spec.level_pos)):
             f = jnp.take(feats, jnp.asarray(pos.reshape(-1)), axis=0)
-            f = f.reshape(lvl.shape + (self.g.feat_dim,))
+            f = f.reshape(lvl.shape + (D,))
             valid = jnp.asarray(lvl >= 0)
             f = f * valid[..., None].astype(f.dtype)
             batch[f"feats_{li}"] = f
@@ -247,48 +433,68 @@ class ShardedBatchBuilder(DeviceBatchBuilder):
     hit/miss split, same accounting — bit-identical specs), plus the
     ownership routing read off ``CliqueCache.shard_routing``: per cached
     id, which clique device's shard holds the row and at which local slot.
-    The *joint* finalize — routed gather across the clique, miss overlay,
-    per-clique psum — lives in the train loop's sharded step;
-    ``pack_sharded_specs`` stacks one spec per clique device into the
-    mesh-ready arrays it consumes.  Calling ``finalize`` on this builder
-    directly falls back to the single-device gather (identical rows), so
-    spec-level tooling keeps working without a mesh.
+    Routing tables and the shard-stack materialization are resolved **once
+    per cache epoch** (not per spec — `tests/test_sharded.py` pins this):
+    the first spec build of an epoch reads the routing and materializes the
+    per-device shard stack on the prefetch worker — serialized with
+    refresh hooks — so the consumer-thread finalize only ever sees
+    epoch-pinned buffers.  The *joint* finalize — routed gather across the
+    clique, miss overlay, per-clique psum — lives in the train loop's
+    sharded step; ``pack_sharded_specs`` stacks one spec per clique device
+    into the mesh-ready arrays it consumes.  Calling ``finalize`` on this
+    builder directly falls back to the single-device gather (identical
+    rows), so spec-level tooling keeps working without a mesh.
     """
 
     backend = "sharded"
 
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._routing_epoch = -1
+        self._routing = None
+
+    def _routing_for_epoch(self):
+        """Per-epoch memo of (owner, local_slot); re-derived only after an
+        online refresh bumps ``cache.epoch``."""
+        ep = self.cache.epoch
+        if self._routing_epoch != ep:
+            owner, local = self.cache.shard_routing()
+            if len(owner):
+                # materialize the shard stack *here*, on the prefetch
+                # worker — serialized with refresh hooks — once per epoch
+                self.cache.sharded_device_arrays()
+            self._routing = (owner, local)
+            self._routing_epoch = ep
+        return self._routing
+
     def build_spec(self, seeds, rng):
         spec = super().build_spec(seeds, rng)
-        owner, local = self.cache.shard_routing()
+        owner, local = self._routing_for_epoch()
         if len(owner) == 0:  # empty feature cache: every id is a host fill
             spec.owner = np.full(len(spec.ids), -1, dtype=np.int32)
             spec.local_slot = np.zeros(len(spec.ids), dtype=np.int32)
             return spec
-        # materialize the shard stack *here*, on the prefetch worker —
-        # serialized with refresh hooks — so the consumer-thread finalize
-        # only ever sees epoch-pinned buffers (the same invariant the flat
-        # device_arrays path gets from its spec-build-time use)
-        self.cache.sharded_device_arrays()
-        safe = np.maximum(spec.cache_pos, 0)
+        safe = np.maximum(spec.cache_pos, 0)  # pads/misses route as -1
         spec.owner = np.where(spec.hit, owner[safe], -1).astype(np.int32)
         spec.local_slot = np.where(spec.hit, local[safe], -1).astype(np.int32)
         return spec
 
 
 def pack_sharded_specs(specs: Sequence[BatchSpec], feat_dim: int,
-                       bucket: int = 256) -> Dict[str, np.ndarray]:
+                       bucket: int = DEFAULT_BUCKET) -> Dict[str, np.ndarray]:
     """Stack one ``ShardedBatchBuilder`` spec per clique device into the
     arrays the sharded train step shards over the clique mesh axis
     (leading axis = clique-local device).
 
     Unique-id counts differ per device, so ids pad to the bucket-rounded
-    clique max (bounding jit retraces to one per bucket).  Padded tail
-    entries route as misses with zero fill rows and are never referenced
-    by any level position.  Returns::
+    clique max (bounding jit retraces to one per bucket) — the specs
+    arrive already bucket-rounded per device, and this pass re-rounds to
+    the clique-wide max.  Padded tail entries route as misses with zero
+    fill rows and are never referenced by any level position.  Returns::
 
         owner      (k, n_pad) int32   routing: owning device, -1 = miss/pad
         local      (k, n_pad) int32   row within the owner's shard
-        miss_rows  (k, n_pad, D) f32  host-fetched rows at miss slots, else 0
+        miss_rows  (k, n_pad, D) f32  host-staged rows at miss slots, else 0
         labels     (k, B) int32
         pos_{l}    (k, prod(level_l shape)) int32  positions into ids
         valid_{l}  (k, *level_l shape) bool        lvl >= 0
@@ -306,11 +512,13 @@ def pack_sharded_specs(specs: Sequence[BatchSpec], feat_dim: int,
     local = np.zeros((k, n_pad), dtype=np.int32)
     miss_rows = np.zeros((k, n_pad, feat_dim), dtype=np.float32)
     for gi, s in enumerate(specs):
-        n = len(s.ids)
+        n = len(s.owner)
         owner[gi, :n] = s.owner
         local[gi, :n] = np.maximum(s.local_slot, 0)
-        if s.miss_feats is not None and len(s.miss_feats):
-            miss_rows[gi, np.flatnonzero(~s.hit)] = s.miss_feats
+        mloc = np.flatnonzero(s.miss_inv >= 0) if s.miss_inv is not None \
+            else np.zeros(0, np.int64)
+        if len(mloc):
+            miss_rows[gi, mloc] = s.miss_feats[:s.n_miss, :feat_dim]
     packed = {"owner": owner, "local": local, "miss_rows": miss_rows,
               "labels": np.stack([s.labels for s in specs])}
     n_levels = len(specs[0].levels)

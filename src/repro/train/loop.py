@@ -133,9 +133,11 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               seed: int = 0, counter: Optional[TrafficCounter] = None,
               checkpoint_dir: Optional[str] = None, checkpoint_every: int = 50,
               resume: bool = False, prefetch_depth: int = 2,
+              prefetch_workers: Optional[int] = None,
               shuffle: str = "local", mesh=None,
               compress_grads: bool = False, backend: str = "host",
-              gather: str = "auto",
+              gather: str = "auto", fused: bool = True,
+              bucket: int = 256, sampler: str = "chain",
               refresh_interval: Optional[int] = None,
               refresh_config=None) -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
@@ -145,7 +147,16 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     ``"host"`` is the classic CPU path; ``"device"`` samples and gathers
     against the HBM-resident unified cache (``gather`` picks the cached-row
     gather impl: auto|pallas|xla) with the host filling only misses, and
-    overlaps the device-side gather with the previous train step.
+    overlaps the device-side gather with the previous train step.  The
+    device phase is retrace-free: specs pad to ``bucket``-rounded shapes
+    and finalize is one fused jitted dispatch (``fused=False`` restores
+    the legacy gather→overlay→take chain; ``sampler="stepwise"`` the
+    per-hop-sync sampler — both kept for parity tests and the
+    ``pipeline_stall`` before/after benchmark).  ``prefetch_workers``
+    sizes the Prefetcher's build pool (default: one thread per device,
+    capped at cpu_count-1 — serial on small hosts); per-device spec
+    builds of one step run concurrently, the refresh hook stays
+    serialized with all of them.
     ``"sharded"`` is the clique-parallel executor: ``devices`` must span
     exactly one NVLink/ICI clique, each mesh device holds its own cache
     partition (``CliqueCache.sharded_device_arrays``), batch gathers are
@@ -269,7 +280,9 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     builders = {}
     for d in devices:
         cache = plan.cache_for_device(d) if plan is not None else None
-        kw = {"gather": gather} if backend in ("device", "sharded") else {}
+        kw = ({"gather": gather, "fused": fused, "bucket": bucket,
+               "sampler": sampler}
+              if backend in ("device", "sharded") else {})
         if manager is not None:
             kw["observer"] = manager.observer_for(d)
         builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
@@ -286,15 +299,20 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             cfg, opt, clique_mesh, CLIQUE_AXIS, n_total=per_dev * n_dev,
             feat_dim=g.feat_dim, impl=builders[devices[0]].gather)
 
-    def spec_fn(step: int) -> list:
-        """Host phase of one *synchronized* step: per-device batch specs."""
-        out = []
-        for d in devices:
-            rng = rngs[d]
-            tablet = streams[d]
+    def make_spec_fn(d: int):
+        """Host phase of one device's part of a *synchronized* step.  One
+        closure per device so the Prefetcher pool can build them
+        concurrently: each owns its device's RNG stream, builder and
+        observer (single-owner — the step barrier keeps one device's
+        builds serial across steps), and shared TrafficCounter tallies
+        commute under the counter's lock, so totals stay bit-identical to
+        the serial build order."""
+        rng, tablet, builder = rngs[d], streams[d], builders[d]
+
+        def spec_fn(step: int):
             seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
-            out.append(builders[d].build_spec(seeds, rng))
-        return out
+            return builder.build_spec(seeds, rng)
+        return spec_fn
 
     def finalize_batch(item):
         """Device phase: finalize every part and concatenate (==DP).  Runs
@@ -313,13 +331,21 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             return parts[0]
         return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
 
-    prefetcher = Prefetcher(spec_fn, depth=prefetch_depth,
+    def pack_fn(specs):
+        """Sharded second host phase: mesh-layout pack, then hand each
+        spec's staging buffer back to its builder's pool."""
+        packed = pack_sharded_specs(specs, g.feat_dim, bucket=bucket)
+        for d, s in zip(devices, specs):
+            builders[d].release_spec(s)
+        return packed
+
+    prefetcher = Prefetcher(part_fns=[make_spec_fn(d) for d in devices],
+                            workers=prefetch_workers, depth=prefetch_depth,
                             limit=max(steps - step0, 0),
                             pre_batch_hook=(manager.on_step
                                             if manager is not None else None),
-                            pack_fn=((lambda specs: pack_sharded_specs(
-                                specs, g.feat_dim))
-                                if backend == "sharded" else None))
+                            pack_fn=(pack_fn if backend == "sharded"
+                                     else None))
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)

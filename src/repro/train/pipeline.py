@@ -1,48 +1,95 @@
 """Fine-grained training pipeline (paper §5) + straggler mitigation.
 
-* ``Prefetcher``: background thread running the sampling server (batch
-  generation + neighbor sampling + the host phase of feature extraction)
-  while the device trains batch i — the inter-batch pipeline of Figure 7.
-  It is backend-agnostic: ``batch_fn`` returns whatever the consumer's
-  ``BatchBuilder.finalize`` accepts (numpy ``BatchSpec`` lists in the train
-  loop), so host-side work queues up while device-side work (cache gather,
-  train step) rides JAX's async dispatch.  Per-batch host build times are
-  tracked for the pipeline-efficiency benchmarks (``summary()``).
+* ``Prefetcher``: background sampling server (batch generation + neighbor
+  sampling + the host phase of feature extraction) running ahead of the
+  device — the inter-batch pipeline of Figure 7.  Two build modes:
+
+    batch_fn(step) -> item      one callable builds the whole step
+    part_fns=[fn, ...]          one callable per device; the parts of one
+                                step build **concurrently** on a worker
+                                pool and are delivered as a list in
+                                device order
+
+  The pool mode is what keeps a multi-device host phase off the critical
+  path: per-device spec builds are independent (each device owns its RNG,
+  observer and accounting row; shared tallies take the counter's lock), so
+  they fan out across ``workers`` threads, while the step sequence itself
+  stays serial — ``pre_batch_hook(step)`` runs strictly *between* steps,
+  after every build of step ``i`` has finished (the gather of part futures
+  is the barrier) and before any build of step ``i+1`` starts.  That
+  serialization is what lets the online cache manager mutate cache
+  residency between (never during) spec builds without a lock.
+
+  ``summary()`` reports per-batch host build/pack time *and* queue-dry
+  time — how long ``get()`` sat waiting on an empty queue, i.e. the time
+  the device would have stalled for host work (the quantity the
+  ``pipeline_stall`` benchmark attributes wins to).
 * ``StragglerMonitor``: EWMA step-time tracker flagging outlier steps; at
   fleet scale its per-host summaries feed backup-task dispatch — here it
   drives logging and the queue-depth guard.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
-from typing import Callable, Optional
+from concurrent.futures import ThreadPoolExecutor, wait
+from typing import Callable, List, Optional
+
+# get() polls at this interval so a worker exception raised while the
+# consumer is blocked surfaces within ~one tick, not after the full timeout
+_POLL_S = 0.05
 
 
 class Prefetcher:
-    def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2,
-                 limit: Optional[int] = None,
+    def __init__(self, batch_fn: Optional[Callable[[int], dict]] = None,
+                 depth: int = 2, limit: Optional[int] = None,
                  pre_batch_hook: Optional[Callable[[int], None]] = None,
-                 pack_fn: Optional[Callable[[dict], dict]] = None):
+                 pack_fn: Optional[Callable[[dict], dict]] = None, *,
+                 part_fns: Optional[List[Callable[[int], object]]] = None,
+                 workers: Optional[int] = None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
         traffic accounting — would include a timing-dependent tail of
         batches nobody consumes.
 
-        ``pre_batch_hook(step)`` runs on the worker thread immediately
-        before building batch ``step`` — serialized with ``batch_fn`` by
-        construction, which is what lets the online cache manager mutate
-        cache residency between (never during) spec builds without a lock.
-        Hook exceptions propagate exactly like batch_fn exceptions.
+        ``pre_batch_hook(step)`` runs on the coordinator thread immediately
+        before building batch ``step`` — serialized with every build (in
+        pool mode the futures barrier guarantees no build is in flight),
+        which is what lets the online cache manager mutate cache residency
+        between (never during) spec builds without a lock.  Hook exceptions
+        propagate exactly like build exceptions.
+
+        ``part_fns`` switches to pool mode: each step's batch is the list
+        ``[fn(step) for fn in part_fns]`` with the parts built concurrently
+        on ``workers`` threads.  The default is CPU-budgeted — one thread
+        per part, capped at ``os.cpu_count() - 1`` so the build pool never
+        starves the consumer (and, on a CPU-backend simulator, the XLA
+        compute itself); on a 2-core box it degrades to a serial build.
+        ``workers=1`` builds serially in order.  The delivered list is
+        always in ``part_fns`` order regardless of completion order.
 
         ``pack_fn`` is an optional second host phase applied to each
-        built batch on the worker thread (timed separately in
+        built batch on the coordinator thread (timed separately in
         ``summary()``): the sharded executor packs per-device specs into
         mesh-sharded arrays here, so the consumer thread dequeues batches
         that are already in device-shardable layout."""
+        if (batch_fn is None) == (part_fns is None):
+            raise ValueError("pass exactly one of batch_fn / part_fns")
         self._batch_fn = batch_fn
+        self._part_fns = list(part_fns) if part_fns is not None else None
+        if self._part_fns is not None and not self._part_fns:
+            raise ValueError("part_fns must not be empty")
+        n_parts = len(self._part_fns) if self._part_fns is not None else 1
+        if workers is None:
+            workers = max(1, (os.cpu_count() or 2) - 1)
+        self._workers = max(1, min(int(workers), n_parts))
+        self._pool = (ThreadPoolExecutor(max_workers=self._workers,
+                                         thread_name_prefix="prefetch-build")
+                      if self._part_fns is not None and self._workers > 1
+                      else None)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._step = 0
@@ -52,10 +99,23 @@ class Prefetcher:
         self._build_s = 0.0
         self._pack_s = 0.0
         self._built = 0
+        self._dry_s = 0.0
+        self._gets = 0
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._exc: Optional[BaseException] = None
         self._exc_raised = False
         self._thread.start()
+
+    def _build(self, step: int):
+        if self._part_fns is None:
+            return self._batch_fn(step)
+        if self._pool is None:
+            return [fn(step) for fn in self._part_fns]
+        futs = [self._pool.submit(fn, step) for fn in self._part_fns]
+        # barrier: every part of step i lands before this returns (and so
+        # before the next pre_batch_hook), even if one of them failed
+        wait(futs)
+        return [f.result() for f in futs]  # raises the first part failure
 
     def _worker(self):
         try:
@@ -65,7 +125,7 @@ class Prefetcher:
                 if self._hook is not None:
                     self._hook(self._step)
                 t0 = time.perf_counter()
-                batch = self._batch_fn(self._step)
+                batch = self._build(self._step)
                 self._build_s += time.perf_counter() - t0
                 if self._pack_fn is not None:
                     t0 = time.perf_counter()
@@ -83,19 +143,43 @@ class Prefetcher:
             self._exc = e
 
     def get(self, timeout: float = 60.0) -> dict:
-        if self._exc is not None:
-            self._exc_raised = True
-            raise self._exc
-        return self._q.get(timeout=timeout)
+        """Next prefetched batch.  Polls in short intervals so a worker
+        exception surfaces promptly even while this thread is blocked on an
+        empty queue (a dead worker used to mean a bare ``queue.Empty``
+        after the full timeout).  Wall time spent in here is accumulated as
+        queue-dry (device-stall) time for ``summary()``."""
+        t0 = time.perf_counter()
+        deadline = t0 + timeout
+        try:
+            while True:
+                if self._exc is not None:
+                    self._exc_raised = True
+                    raise self._exc
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    raise queue.Empty
+                try:
+                    item = self._q.get(timeout=min(_POLL_S, remaining))
+                except queue.Empty:
+                    continue
+                self._gets += 1
+                return item
+        finally:
+            self._dry_s += time.perf_counter() - t0
 
     def summary(self) -> dict:
-        """Host-phase build stats (what the device would stall on if the
-        queue ran dry)."""
+        """Host-phase build stats plus what the device actually stalled on:
+        ``queue_dry_s_*`` is time ``get()`` spent waiting for the queue —
+        with a deep-enough queue and a fast-enough host phase it stays near
+        zero, and any growth is directly attributable device idle time."""
         return {"batches_built": self._built,
                 "host_build_s_total": self._build_s,
                 "host_build_s_mean": self._build_s / max(self._built, 1),
                 "host_pack_s_total": self._pack_s,
-                "host_pack_s_mean": self._pack_s / max(self._built, 1)}
+                "host_pack_s_mean": self._pack_s / max(self._built, 1),
+                "queue_dry_s_total": self._dry_s,
+                "queue_dry_s_mean": self._dry_s / max(self._gets, 1),
+                "build_workers": self._workers}
 
     def close(self):
         """Stop the worker.  A worker exception that was never surfaced via
@@ -103,6 +187,8 @@ class Prefetcher:
         (or in a refresh hook) must not be silently swallowed at shutdown."""
         self._stop.set()
         self._thread.join(timeout=5)
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
         if self._exc is not None and not self._exc_raised:
             self._exc_raised = True
             raise self._exc

@@ -72,17 +72,31 @@ def test_batch_parity(setup, gather):
 
 def test_device_spec_is_hit_miss_split(setup):
     """The device spec ships only miss rows host-side — the cache-resident
-    majority never crosses the host boundary."""
+    majority never crosses the host boundary — in the bucket-rounded
+    layout: ids/cache_pos/hit/miss_inv pad to the bucket quantum with
+    inert tails, and miss rows live in the staging buffer's head."""
     g, plan = setup
     _, bd, _, _ = _builders(g, plan)
     seeds = plan.partition.tablets[0][:64]
     spec = bd.build_spec(seeds, np.random.default_rng(5))
-    n_miss = int((~spec.hit).sum())
-    assert spec.miss_feats.shape == (n_miss, g.feat_dim)
-    assert n_miss < len(spec.ids)  # the cache actually absorbs traffic
+    n = spec.n_ids
+    # bucket-rounded stable shapes, inert padding
+    assert len(spec.ids) == len(spec.cache_pos) == len(spec.hit) \
+        == len(spec.miss_inv)
+    assert len(spec.ids) % bd.bucket == 0
+    assert spec.miss_feats.shape[0] % bd.bucket == 0
+    assert (spec.ids[n:] == -1).all() and not spec.hit[n:].any()
+    assert (spec.miss_inv[n:] == -1).all()
+    # only the true misses ship feature rows (staged at the head)
+    assert spec.n_miss == int((~spec.hit[:n]).sum())
+    assert spec.n_miss < n  # the cache actually absorbs traffic
+    miss_ids = spec.ids[:n][~spec.hit[:n]]
+    np.testing.assert_array_equal(spec.miss_feats[:spec.n_miss, :g.feat_dim],
+                                  g.get_features(miss_ids))
     # split_hits is consistent with what extract_features would do
-    pos, hit = plan.cache_for_device(0).split_hits(spec.ids)
-    np.testing.assert_array_equal(hit, spec.hit)
+    pos, hit = plan.cache_for_device(0).split_hits(spec.ids[:n])
+    np.testing.assert_array_equal(hit, spec.hit[:n])
+    np.testing.assert_array_equal(pos, spec.cache_pos[:n])
 
 
 def test_train_gnn_backend_parity(setup):
@@ -98,6 +112,95 @@ def test_train_gnn_backend_parity(setup):
     assert rh.counter.topo_hits == rd.counter.topo_hits
     assert rh.counter.pcie_transactions == rd.counter.pcie_transactions
     assert rd.pipeline["batches_built"] >= rd.steps
+
+
+def test_fused_matches_legacy_finalize(setup):
+    """fused one-dispatch finalize == the legacy gather→overlay→take chain
+    (and the stepwise sampler == the chained one), bit for bit."""
+    g, plan = setup
+    cache = plan.cache_for_device(0)
+    seeds = plan.partition.tablets[0][:64]
+    bf = DeviceBatchBuilder(g, cache, FANOUTS, None, 0, gather="xla")
+    bl = DeviceBatchBuilder(g, cache, FANOUTS, None, 0, gather="xla",
+                            fused=False, sampler="stepwise")
+    for trial in range(3):
+        rng_f, rng_l = (np.random.default_rng(20 + trial) for _ in range(2))
+        a = bf.build(seeds, rng_f)
+        b = bl.build(seeds, rng_l)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k], np.float32),
+                                          np.asarray(b[k], np.float32),
+                                          err_msg=k)
+
+
+def test_device_finalize_retraces_once_per_bucket(setup):
+    """The tentpole pin: across a 50-step device-backend run the fused
+    finalize compiles at most once per (id-bucket, miss-bucket) shape pair
+    — not once per batch — and the host backend's finalize path triggers
+    no XLA compile at all."""
+    import jax
+
+    from repro.train import batch as batch_mod
+
+    g, plan = setup
+    cache = plan.cache_for_device(0)
+    tablet = plan.partition.tablets[0]
+    compiles = {"on": False, "n": 0}
+
+    def _listener(event, _dur, **kw):
+        if compiles["on"] and event.startswith("/jax/core/compile"):
+            compiles["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+
+    builder = DeviceBatchBuilder(g, cache, FANOUTS, None, 0, gather="xla")
+    fused = batch_mod._get_fused_finalize()
+    fused.clear_cache()
+    rng = np.random.default_rng(77)
+    shapes = set()
+    for _ in range(50):
+        seeds = tablet[rng.integers(0, len(tablet), 64)]
+        spec = builder.build_spec(seeds, rng)
+        shapes.add((len(spec.ids), spec.miss_feats.shape[0]))
+        jax.block_until_ready(builder.finalize(spec))
+    # ≤ one compile per shape bucket (50 batches collapse to a handful of
+    # bucket pairs), where the pre-fused path retraced almost every batch
+    assert fused._cache_size() <= len(shapes)
+    assert len(shapes) <= 6, f"bucketing failed to collapse shapes: {shapes}"
+
+    # host backend: 50 build+finalize cycles, zero compiles
+    host = HostBatchBuilder(g, cache, FANOUTS, None, 0)
+    jax.block_until_ready(host.build(tablet[:64], np.random.default_rng(1)))
+    compiles["on"] = True
+    try:
+        for _ in range(50):
+            seeds = tablet[rng.integers(0, len(tablet), 64)]
+            jax.block_until_ready(host.build(seeds, rng))
+    finally:
+        compiles["on"] = False
+    assert compiles["n"] == 0, "host finalize path must stay compile-free"
+
+
+def test_staging_pool_reuse_and_padding_is_inert(setup):
+    """The miss staging buffer is reused across batches (no fresh host
+    array per batch) and releasing+reacquiring never corrupts an
+    already-finalized batch."""
+    import jax
+
+    g, plan = setup
+    cache = plan.cache_for_device(0)
+    builder = DeviceBatchBuilder(g, cache, FANOUTS, None, 0, gather="xla")
+    seeds = plan.partition.tablets[0][:64]
+    spec1 = builder.build_spec(seeds, np.random.default_rng(9))
+    buf = spec1.miss_feats
+    batch1 = builder.finalize(spec1)           # releases the buffer
+    snap = {k: np.asarray(v).copy() for k, v in batch1.items()}
+    spec2 = builder.build_spec(seeds, np.random.default_rng(10))
+    assert spec2.miss_feats is buf, "staging buffer was not pooled"
+    jax.block_until_ready(builder.finalize(spec2))
+    for k, v in batch1.items():               # batch1 unharmed by the reuse
+        np.testing.assert_array_equal(np.asarray(v), snap[k], err_msg=k)
 
 
 def test_make_batch_builder_validation(setup):

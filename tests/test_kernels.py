@@ -102,6 +102,59 @@ def test_scatter_then_gather_roundtrip():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(rows))
 
 
+def _fused_case(N, D, B, M, seed=0, dtype=jnp.float32):
+    """Random fused-finalize instance: disjoint hit / miss / pad rows."""
+    key = jax.random.PRNGKey(seed)
+    table = jax.random.normal(key, (N, D), dtype)
+    miss = jax.random.normal(jax.random.fold_in(key, 1), (M, D), dtype)
+    rng = np.random.default_rng(seed)
+    kind = rng.integers(0, 3, size=B)  # 0 = hit, 1 = miss, 2 = pad
+    idx = np.where(kind == 0, rng.integers(0, N, size=B), -1).astype(np.int32)
+    n_miss = int((kind == 1).sum())
+    inv = np.full(B, -1, np.int32)
+    inv[kind == 1] = rng.permutation(M)[:n_miss] if n_miss <= M else 0
+    return table, jnp.asarray(idx), miss, jnp.asarray(inv), kind
+
+
+@pytest.mark.parametrize("N,D,B,M", [(64, 128, 33, 16), (100, 256, 17, 8),
+                                     (7, 100, 12, 5), (50, 384, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_gather_overlay_matches_ref(N, D, B, M, dtype):
+    table, idx, miss, inv, _ = _fused_case(N, D, B, min(M, B), dtype=dtype)
+    np.testing.assert_array_equal(
+        np.asarray(ops.fused_gather_overlay(table, idx, miss, inv)),
+        np.asarray(ref.fused_gather_overlay(table, idx, miss, inv)))
+
+
+def test_fused_gather_overlay_matches_unfused_chain():
+    """The fused op == the old two-dispatch chain (gather, then .at[].set
+    overlay of the miss rows) — the exact path it replaces in finalize."""
+    table, idx, miss, inv, kind = _fused_case(40, 130, 50, 20, seed=3)
+    got = np.asarray(ops.fused_gather_overlay(table, idx, miss, inv))
+    chain = ref.gather_rows(table, idx)
+    rows = np.flatnonzero(kind == 1)
+    chain = chain.at[jnp.asarray(rows)].set(miss[inv[jnp.asarray(rows)]])
+    np.testing.assert_array_equal(got, np.asarray(chain))
+    # pad rows (neither source) are exactly zero
+    pads = np.flatnonzero(kind == 2)
+    assert (got[pads] == 0).all()
+
+
+def test_fused_gather_overlay_single_row_sources():
+    """Degenerate shapes the bucket discipline produces: a 1-row dummy
+    table (empty cache) and a 1-row zero miss buffer (no misses)."""
+    D = 64
+    table = jnp.zeros((1, D))
+    miss = jnp.arange(D, dtype=jnp.float32)[None, :] + 1.0
+    idx = jnp.asarray([-1, -1, -1], jnp.int32)
+    inv = jnp.asarray([0, -1, -1], jnp.int32)
+    out = np.asarray(ops.fused_gather_overlay(table, idx, miss, inv))
+    np.testing.assert_array_equal(out[0], np.asarray(miss)[0])
+    assert (out[1:] == 0).all()
+    with pytest.raises(ValueError, match="feature dim"):
+        ops.fused_gather_overlay(table, idx, jnp.zeros((1, D + 2)), inv)
+
+
 @pytest.mark.parametrize("N,D,B,F", [(64, 128, 8, 5), (128, 256, 16, 10),
                                      (32, 128, 4, 25)])
 def test_sage_aggregate_matches_ref(N, D, B, F):

@@ -1,5 +1,7 @@
-"""Prefetcher contract: exception surfacing (next() AND close()) + the
-pre-batch hook the online cache manager runs on."""
+"""Prefetcher contract: exception surfacing (next() AND close(), promptly
+even mid-block), the pre-batch hook the online cache manager runs on, and
+the concurrent per-device build pool."""
+import threading
 import time
 
 import pytest
@@ -67,3 +69,140 @@ def test_pre_batch_hook_exception_surfaces_on_close():
     _wait_worker_done(p)
     with pytest.raises(ValueError, match="hook died"):
         p.close()
+
+
+def test_worker_exception_surfaces_promptly_while_blocked():
+    """Regression: a worker dying *after* the consumer has already blocked
+    in get() used to surface as a bare queue.Empty only after the full
+    timeout; the polling get must re-raise within a tick."""
+    def bad(step):
+        time.sleep(0.3)  # let the consumer block on the empty queue first
+        raise RuntimeError("late boom")
+
+    p = Prefetcher(bad, depth=2, limit=2)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="late boom"):
+        p.get(timeout=60.0)
+    assert time.monotonic() - t0 < 5.0, \
+        "exception sat hidden until the get() timeout"
+    p.close()
+
+
+def test_get_timeout_still_raises_empty():
+    import queue
+
+    p = Prefetcher(lambda step: time.sleep(10), depth=1, limit=1)
+    with pytest.raises(queue.Empty):
+        p.get(timeout=0.2)
+    p._stop.set()  # do not wait for the sleeping build at close
+
+
+def test_part_fns_build_concurrently_and_deliver_in_order():
+    """Pool mode: one step's parts run in parallel (overlapping sleeps
+    finish in ~one sleep, not the sum) and arrive in part_fns order."""
+    gate = threading.Barrier(3, timeout=10)
+
+    def make(i):
+        def fn(step):
+            gate.wait()  # deadlocks unless all three run concurrently
+            return (i, step)
+        return fn
+
+    p = Prefetcher(part_fns=[make(i) for i in range(3)], workers=3,
+                   depth=2, limit=2)
+    assert p.get(timeout=10) == [(0, 0), (1, 0), (2, 0)]
+    assert p.get(timeout=10) == [(0, 1), (1, 1), (2, 1)]
+    p.close()
+    assert p.summary()["build_workers"] == 3
+
+
+def test_part_fns_workers_one_is_serial():
+    order = []
+
+    def make(i):
+        def fn(step):
+            order.append((step, i))
+            return i
+        return fn
+
+    p = Prefetcher(part_fns=[make(i) for i in range(3)], workers=1,
+                   depth=2, limit=2)
+    assert p.get(timeout=10) == [0, 1, 2]
+    assert p.get(timeout=10) == [0, 1, 2]
+    p.close()
+    assert order == [(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]
+
+
+def test_hook_serialized_with_pool_builds():
+    """pre_batch_hook(step) runs strictly between steps: never while any
+    part build of the previous step is still in flight."""
+    in_flight = []
+    max_seen = []
+    lock = threading.Lock()
+
+    def make(i):
+        def fn(step):
+            with lock:
+                in_flight.append(i)
+                max_seen.append(len(in_flight))
+            time.sleep(0.02)
+            with lock:
+                in_flight.remove(i)
+            return i
+        return fn
+
+    hook_calls = []
+
+    def hook(step):
+        assert not in_flight, f"hook ran with builds in flight: {in_flight}"
+        hook_calls.append(step)
+
+    p = Prefetcher(part_fns=[make(i) for i in range(4)], workers=4,
+                   depth=2, limit=3, pre_batch_hook=hook)
+    for _ in range(3):
+        p.get(timeout=10)
+    p.close()
+    assert hook_calls == [0, 1, 2]
+    assert max(max_seen) > 1, "parts never actually overlapped"
+
+
+def test_part_fn_exception_surfaces():
+    def make(i):
+        def fn(step):
+            if i == 2 and step == 1:
+                raise RuntimeError("part died")
+            return i
+        return fn
+
+    p = Prefetcher(part_fns=[make(i) for i in range(3)], depth=4, limit=4)
+    # the worker may set the exception before or after the consumer drains
+    # batch 0 (get() surfaces a pending exception in preference to queued
+    # batches, as it always has) — either way it must raise within a tick
+    with pytest.raises(RuntimeError, match="part died"):
+        assert p.get(timeout=10) == [0, 1, 2]
+        p.get(timeout=10)
+    p.close()
+
+
+def test_summary_reports_queue_dry_time():
+    def slow(step):
+        time.sleep(0.15)
+        return {"step": step}
+
+    p = Prefetcher(slow, depth=2, limit=2)
+    p.get()
+    p.get()
+    p.close()
+    s = p.summary()
+    assert s["queue_dry_s_total"] >= 0.1  # the consumer really waited
+    assert s["queue_dry_s_mean"] > 0
+    assert s["build_workers"] == 1
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        Prefetcher()
+    with pytest.raises(ValueError, match="exactly one"):
+        Prefetcher(lambda s: s, part_fns=[lambda s: s])
+    with pytest.raises(ValueError, match="not be empty"):
+        Prefetcher(part_fns=[])

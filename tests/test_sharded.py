@@ -14,8 +14,67 @@ import subprocess
 import sys
 
 import jax
+import numpy as np
 
 import _sharded_checks
+
+
+def test_sharded_spec_build_hoists_routing_once_per_epoch():
+    """Satellite pin: ShardedBatchBuilder resolves shard_routing() and the
+    shard-stack materialization once per cache epoch — NOT once per spec.
+    (Runs on one device: only specs are built, no mesh needed.)"""
+    from repro.core.cliques import topology_matrix
+    from repro.core.planner import build_plan
+    from repro.graph.csr import powerlaw_graph
+    from repro.train.batch import ShardedBatchBuilder
+
+    g = powerlaw_graph(2000, 8, seed=3, feat_dim=16)
+    plan = build_plan(g, topology_matrix("nv2", 2), mem_per_device=200_000,
+                      batch_size=128, seed=0)
+    cache = plan.cache_for_device(0)
+    calls = {"routing": 0, "stack": 0}
+    orig_routing = cache.shard_routing
+    orig_stack = cache.sharded_device_arrays
+
+    def counting_routing():
+        calls["routing"] += 1
+        return orig_routing()
+
+    def counting_stack(epoch=None):
+        calls["stack"] += 1
+        return orig_stack(epoch)
+
+    cache.shard_routing = counting_routing
+    cache.sharded_device_arrays = counting_stack
+    try:
+        b = ShardedBatchBuilder(g, cache, (4, 2), None, 0, gather="xla")
+        rng = np.random.default_rng(0)
+        tablet = plan.partition.tablets[0]
+        specs = [b.build_spec(tablet[rng.integers(0, len(tablet), 64)], rng)]
+        base = dict(calls)
+        assert base["routing"] >= 1 and base["stack"] >= 1
+        specs += [b.build_spec(tablet[rng.integers(0, len(tablet), 64)], rng)
+                  for _ in range(4)]
+        assert calls == base, f"routing re-derived per spec: {calls} vs {base}"
+        # a refresh epoch invalidates the memo: re-derived once, then flat
+        cache.begin_epoch()
+        cache.apply_feature_delta(cache.feat_ids[:2].copy(),
+                                  np.asarray([], np.int64),
+                                  np.asarray([], np.int32))
+        b.build_spec(tablet[rng.integers(0, len(tablet), 64)], rng)
+        base2 = dict(calls)
+        assert base2["routing"] > base["routing"]
+        for _ in range(3):
+            b.build_spec(tablet[rng.integers(0, len(tablet), 64)], rng)
+        assert calls == base2, f"memo not re-pinned after refresh: {calls}"
+        # routed fields still consistent with the hit split
+        s = specs[0]
+        n = s.n_ids
+        assert ((s.owner[:n] >= 0) == s.hit[:n]).all()
+        assert (s.owner[n:] == -1).all()
+    finally:
+        cache.shard_routing = orig_routing
+        cache.sharded_device_arrays = orig_stack
 
 
 def test_sharded_suite():
