@@ -577,6 +577,20 @@ def bench_clique_scaling() -> List[tuple]:
     return run_scaling((1, 2, 4), smoke=common.SMOKE)
 
 
+def bench_hierarchy_scaling() -> List[tuple]:
+    """Beyond-paper: the hierarchical (K_c x K_g) executor on one fixed
+    graph — 1x4 vs 2x2 vs 2x4 meshes, each in its own subprocess with the
+    matching forced device count.  Every configuration is HARD parity-
+    gated against the single-device oracle (identical losses within
+    atol=1e-4, bit-identical traffic, zero cross-clique feature bytes)
+    and reports steps/s plus per-clique local/peer/host-fill bytes; the
+    structured results land in BENCH_hierarchy.json.  See
+    benchmarks/scaling.py."""
+    from benchmarks.scaling import run_hierarchy
+
+    return run_hierarchy(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -593,4 +607,5 @@ ALL_BENCHES = [
     ("pipeline_stall", bench_pipeline_stall),
     ("cache_refresh", bench_cache_refresh),
     ("clique_scaling", bench_clique_scaling),
+    ("hierarchy_scaling", bench_hierarchy_scaling),
 ]

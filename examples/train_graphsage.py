@@ -46,8 +46,18 @@ cfg = GNNConfig(feat_dim=128, hidden=hidden, batch_size=batch,
 n_params = 128 * hidden * 2 + hidden * hidden * 2 + hidden * 32
 print(f"training SAGE hidden={hidden} (~{n_params/1e6:.1f}M params) "
       f"for {steps} steps")
-# the sharded executor runs one clique; the other backends simulate all
-devices = plan.partition.cliques[0] if args.backend == "sharded" else None
+# the sharded executor runs the full (pod, clique) hierarchy when the
+# interpreter sees enough devices, else the first clique (the degenerate
+# K_c=1 mesh); the other backends simulate all devices on one
+devices = None
+if args.backend == "sharded":
+    import jax
+
+    all_devs = [d for c in plan.partition.cliques for d in c]
+    devices = (all_devs if jax.device_count() >= len(all_devs)
+               else plan.partition.cliques[0])
+    k_g = len(plan.partition.cliques[0])
+    print(f"sharded mesh: {len(devices) // k_g}x{k_g} (pod, clique)")
 res = train_gnn(g, plan, cfg, steps=steps, checkpoint_dir=args.ckpt,
                 checkpoint_every=50, backend=args.backend, devices=devices,
                 refresh_interval=args.refresh_interval)

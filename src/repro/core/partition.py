@@ -6,14 +6,17 @@ S2: inter-clique edge-cut-minimizing partition of the graph into K_c parts.
     deterministic greedy) streaming partitioning with a balance penalty —
     the same objective (min edge-cut under balance) at linear cost, plus a
     refinement pass.  `method="hash"` gives the no-locality baseline.
-S3: intra-clique hash split of each partition's training vertices into
-    K_g tablets.
+S3: intra-clique split of each partition's training vertices into K_g
+    tablets — a seeded-permutation round-robin, so tablet sizes are
+    balanced to within one vertex regardless of how training ids are laid
+    out (a raw ``v % K_g`` hash skews badly when train ids are strided or
+    parity-correlated, e.g. every-other-vertex labeling on a K_g=2 box).
 S4: tablet -> device assignment (batch seeds, shuffled locally).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -64,15 +67,45 @@ class PartitionPlan:
     tablets: Dict[int, np.ndarray]  # device id -> training-vertex tablet
     train_vertices: np.ndarray
 
+    def __post_init__(self):
+        # device -> clique lookup table: clique_of_device sits on the
+        # per-spec-build host hot path of the hierarchical executor, so a
+        # linear scan over the clique list is precomputed away here
+        hi = max((d for c in self.cliques for d in c), default=-1)
+        lut = np.full(hi + 1, -1, dtype=np.int32)
+        for ci, c in enumerate(self.cliques):
+            lut[np.asarray(list(c), dtype=np.int64)] = ci
+        self._dev_to_clique = lut
+
     @property
     def k_c(self) -> int:
         return len(self.cliques)
 
     def clique_of_device(self, dev: int) -> int:
-        for ci, c in enumerate(self.cliques):
-            if dev in c:
+        d = int(dev)
+        if 0 <= d < len(self._dev_to_clique):
+            ci = int(self._dev_to_clique[d])
+            if ci >= 0:
                 return ci
         raise KeyError(dev)
+
+    def execution_cliques(self, devices: Sequence[int]
+                          ) -> Tuple[List[int], List[List[int]]]:
+        """Resolve a device set into whole cliques for the hierarchical
+        executor: returns ``(clique_indices, per-clique device lists)`` in
+        clique-major order.  Raises ``ValueError`` if the set only
+        partially covers some clique — each clique's unified cache is
+        partitioned across *all* of its devices, so execution is
+        all-or-nothing per clique."""
+        cids = sorted({self.clique_of_device(d) for d in devices})
+        clique_devs = [list(self.cliques[ci]) for ci in cids]
+        flat = [d for c in clique_devs for d in c]
+        if set(devices) != set(flat):
+            raise ValueError(
+                f"devices {sorted(devices)} partially cover cliques {cids}: "
+                f"their cache partitions span all of {flat}; execution is "
+                "all-or-nothing per clique")
+        return cids, clique_devs
 
 
 def hierarchical_partition(g: CSRGraph, train_vertices: np.ndarray,
@@ -87,8 +120,12 @@ def hierarchical_partition(g: CSRGraph, train_vertices: np.ndarray,
     for ci, devices in enumerate(cliques):  # S3 + S4
         tv = train_vertices[vertex_part[train_vertices] == ci]
         k_g = len(devices)
-        h = tv % k_g  # hash split inside the clique
+        # seeded-permutation round-robin: tablet sizes differ by <= 1 for
+        # ANY train-id layout (a ``tv % k_g`` hash collapses onto a subset
+        # of devices whenever ids are strided/parity-correlated), and the
+        # permutation doubles as the local shuffle of S4
+        shuffled = tv[rng.permutation(len(tv))]
         for gi, dev in enumerate(devices):
-            tablets[dev] = rng.permutation(tv[h == gi])
+            tablets[dev] = shuffled[gi::k_g]
     return PartitionPlan(cliques=cliques, vertex_part=vertex_part,
                          tablets=tablets, train_vertices=train_vertices)

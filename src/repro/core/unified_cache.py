@@ -73,6 +73,36 @@ class TrafficCounter:
     def topo_hit_rate(self) -> float:
         return self.topo_hits / max(self.topo_requests, 1)
 
+    def cross_clique_bytes(self, cliques: Sequence[Sequence[int]]) -> int:
+        """Device-to-device bytes between devices of *different* cliques.
+        The hierarchical executor's invariant is that this is exactly 0 —
+        feature rows only travel intra-clique (peer exchange) or over
+        PCIe (host fill); tests and the hierarchy benchmark gate on it."""
+        total = 0
+        for ci, devs in enumerate(cliques):
+            others = [d for cj, c in enumerate(cliques) if cj != ci
+                      for d in c]
+            if others:
+                total += int(self.bytes_matrix[
+                    np.ix_(list(devs), others)].sum())
+        return total
+
+    def per_clique_split(self, cliques: Sequence[Sequence[int]]) -> list:
+        """Feature-gather traffic aggregated per clique: local-hit bytes
+        (each device's own partition, the matrix diagonal), peer bytes
+        (intra-clique exchange, off-diagonal within the clique block) and
+        host-fill bytes (the PCIe column)."""
+        out = []
+        for ci, devs in enumerate(cliques):
+            devs = list(devs)
+            sub = self.bytes_matrix[np.ix_(devs, devs)]
+            out.append({"clique": ci,
+                        "local_bytes": int(np.trace(sub)),
+                        "peer_bytes": int(sub.sum() - np.trace(sub)),
+                        "host_fill_bytes": int(
+                            self.bytes_matrix[devs, -1].sum())})
+        return out
+
 
 class CliqueCache:
     """One clique's unified cache."""
@@ -567,6 +597,38 @@ class CliqueCache:
             counter.topo_hits += int(hit.sum())
             counter.pcie_transactions += tx
             counter.bytes_matrix[requester_dev, -1] += n_bytes
+
+
+def stack_hierarchical_shards(caches: Sequence[CliqueCache],
+                              epochs: Sequence[int]):
+    """Stack every clique's partitioned feature residency into the one
+    tensor the hierarchical executor shards over the ``("pod", "clique")``
+    mesh: shape ``(K_c, K_g, R_max, D_padded)`` — row ``ci`` is clique
+    ``ci``'s ``sharded_device_arrays(epochs[ci])["feat_shards"]``.
+
+    Each clique plans its own cache from its own partition hotness, so
+    per-clique row counts differ; shorter stacks zero-pad to the tallest
+    clique's ``R``.  The pad rows are unreachable — every routing entry
+    (``owner``/``local_slot``) indexes within its own clique's real rows.
+    ``epochs`` pins each clique's refresh generation independently (online
+    refreshes fire per clique, so one synchronized step may legitimately
+    combine different epochs across cliques — never within one).
+    """
+    import jax.numpy as jnp
+
+    if len(caches) != len(epochs):
+        raise ValueError(f"{len(caches)} caches but {len(epochs)} epochs")
+    k_gs = {len(c.devices) for c in caches}
+    if len(k_gs) != 1:
+        raise ValueError(f"ragged clique sizes {sorted(k_gs)}: the "
+                         "hierarchical shard stack needs one uniform K_g")
+    stacks = [c.sharded_device_arrays(int(e))["feat_shards"]
+              for c, e in zip(caches, epochs)]
+    R = max(s.shape[1] for s in stacks)
+    padded = [s if s.shape[1] == R
+              else jnp.pad(s, ((0, 0), (0, R - s.shape[1]), (0, 0)))
+              for s in stacks]
+    return jnp.stack(padded)
 
 
 def plan_cache_contents(g: CSRGraph, k_g: int, cslp_res, cost_plan: dict,

@@ -12,6 +12,17 @@ routed gather / gradient psum reduce over it.  On CPU the clique is
 simulated by launching with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax import.
 
+``make_hierarchical_mesh`` is its 2-D generalization — the execution mesh
+of Legion's full hierarchical partitioning (paper §4.1): axes
+``("pod", "clique")``, one row per NVLink/ICI clique of the
+``PartitionPlan`` and one column per device within its clique.  All
+cache/batch traffic stays within a row (``psum`` over ``"clique"`` — the
+routed gather's peer exchange never crosses cliques), while gradient
+synchronization additionally reduces over ``"pod"`` (the data-parallel
+inter-clique axis, PCIe/DCN in hardware).  A single-clique plan is the
+degenerate ``K_c=1`` case of the same mesh — there is no separate 1-D
+execution path in the trainer.
+
 Everything here works on both the legacy (``jax.experimental.shard_map``,
 jax 0.4.x) and the current (``jax.shard_map`` / ``AxisType``) APIs —
 ``shard_map_compat`` picks whichever the installed jax provides, which is
@@ -31,6 +42,7 @@ except ImportError:  # pragma: no cover - legacy jax
     AxisType = None
 
 CLIQUE_AXIS = "clique"
+POD_AXIS = "pod"
 
 
 def _axis_types(n: int) -> dict:
@@ -92,6 +104,50 @@ def make_clique_mesh(n_devices: Optional[int] = None,
         devices = avail[:n]
     dev_array = np.asarray(list(devices))
     return Mesh(dev_array, (axis_name,), **_axis_types(1))
+
+
+def make_hierarchical_mesh(cliques: Sequence[Sequence[int]],
+                           axis_names: Sequence[str] = (POD_AXIS, CLIQUE_AXIS),
+                           devices: Optional[Sequence] = None) -> Mesh:
+    """2-D ``(pod, clique)`` execution mesh built from a partition plan's
+    clique list (``PartitionPlan.cliques``).
+
+    Row ``ci`` of the mesh is clique ``ci``; within a row, column ``gi``
+    is the clique-local device that owns cache partition ``gi`` of that
+    clique's unified cache.  ``devices`` pins specific jax devices in
+    (clique-major) row order; otherwise the first ``K_c * K_g`` of
+    ``jax.devices()`` are used.  The clique list must be uniform — a 2-D
+    mesh cannot express ragged cliques (run a degraded/mixed reservation
+    as separate jobs, or replan it with ``replan_on_topology_change``).
+    """
+    import numpy as np
+
+    sizes = sorted({len(c) for c in cliques})
+    if not cliques or sizes[0] == 0:
+        raise ValueError("make_hierarchical_mesh: need at least one "
+                         "non-empty clique")
+    if len(sizes) != 1:
+        raise ValueError(
+            f"make_hierarchical_mesh: clique sizes {[len(c) for c in cliques]}"
+            " are ragged; the (pod, clique) mesh needs one uniform K_g")
+    k_c, k_g = len(cliques), sizes[0]
+    n = k_c * k_g
+    if devices is None:
+        avail = jax.devices()
+        if len(avail) < n:
+            raise RuntimeError(
+                f"make_hierarchical_mesh: need {n} devices for a "
+                f"{k_c}x{k_g} (pod, clique) mesh, have {len(avail)}. "
+                "Simulate on CPU with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n} (set before "
+                "importing jax).")
+        devices = avail[:n]
+    if len(devices) != n:
+        raise ValueError(
+            f"make_hierarchical_mesh: {len(devices)} devices pinned for a "
+            f"{k_c}x{k_g} mesh (need exactly {n})")
+    dev_array = np.asarray(list(devices)).reshape(k_c, k_g)
+    return Mesh(dev_array, tuple(axis_names), **_axis_types(2))
 
 
 def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):

@@ -47,11 +47,13 @@ is unpadded and compile-free by construction.
 
 A third backend, ``ShardedBatchBuilder`` (``backend="sharded"``), keeps
 the device backend's host phase (and therefore its specs and accounting)
-but adds per-id ownership routing so the clique-parallel executor can
-finalize the whole clique jointly under ``shard_map``: local hits gather
+but adds per-id ownership routing so the hierarchical executor can
+finalize every clique jointly under ``shard_map``: local hits gather
 from the requester's own cache partition, peer hits ride the intra-clique
-exchange, and only true misses are host-filled
-(``tests/test_sharded.py`` pins three-way parity).
+exchange, and only true misses are host-filled.  ``pack_sharded_specs``
+stacks the per-clique spec groups into the ``(K_c, K_g, ...)`` arrays the
+2-D ``(pod, clique)`` mesh shards (``tests/test_sharded.py`` pins
+three-way parity, ``tests/test_hierarchy.py`` the multi-clique runs).
 """
 from __future__ import annotations
 
@@ -439,8 +441,8 @@ class ShardedBatchBuilder(DeviceBatchBuilder):
     per-device shard stack on the prefetch worker — serialized with
     refresh hooks — so the consumer-thread finalize only ever sees
     epoch-pinned buffers.  The *joint* finalize — routed gather across the
-    clique, miss overlay, per-clique psum — lives in the train loop's
-    sharded step; ``pack_sharded_specs`` stacks one spec per clique device
+    clique, miss overlay, mesh-wide psum — lives in the train loop's
+    sharded step; ``pack_sharded_specs`` stacks the per-clique spec groups
     into the mesh-ready arrays it consumes.  Calling ``finalize`` on this
     builder directly falls back to the single-device gather (identical
     rows), so spec-level tooling keeps working without a mesh.
@@ -480,54 +482,78 @@ class ShardedBatchBuilder(DeviceBatchBuilder):
         return spec
 
 
-def pack_sharded_specs(specs: Sequence[BatchSpec], feat_dim: int,
+def pack_sharded_specs(spec_groups: Sequence[Sequence[BatchSpec]],
+                       feat_dim: int,
                        bucket: int = DEFAULT_BUCKET) -> Dict[str, np.ndarray]:
-    """Stack one ``ShardedBatchBuilder`` spec per clique device into the
-    arrays the sharded train step shards over the clique mesh axis
-    (leading axis = clique-local device).
+    """Stack ``ShardedBatchBuilder`` specs — grouped per clique, one spec
+    per clique device — into the arrays the hierarchical train step shards
+    over the 2-D ``(pod, clique)`` mesh (leading axes = clique index,
+    clique-local device).  A single-clique run is simply ``K_c == 1``.
 
     Unique-id counts differ per device, so ids pad to the bucket-rounded
-    clique max (bounding jit retraces to one per bucket) — the specs
+    mesh-wide max (bounding jit retraces to one per bucket) — the specs
     arrive already bucket-rounded per device, and this pass re-rounds to
-    the clique-wide max.  Padded tail entries route as misses with zero
-    fill rows and are never referenced by any level position.  Returns::
+    the global max.  Padded tail entries route as misses with zero fill
+    rows and are never referenced by any level position.  Returns::
 
-        owner      (k, n_pad) int32   routing: owning device, -1 = miss/pad
-        local      (k, n_pad) int32   row within the owner's shard
-        miss_rows  (k, n_pad, D) f32  host-staged rows at miss slots, else 0
-        labels     (k, B) int32
-        pos_{l}    (k, prod(level_l shape)) int32  positions into ids
-        valid_{l}  (k, *level_l shape) bool        lvl >= 0
-        cache_epoch ()                uniform across the clique (asserted)
+        owner      (K_c, K_g, n_pad) int32   routing: owning clique-local
+                                             device, -1 = miss/pad
+        local      (K_c, K_g, n_pad) int32   row within the owner's shard
+        miss_rows  (K_c, K_g, n_pad, D) f32  host-staged rows at miss slots
+        labels     (K_c, K_g, B) int32
+        pos_{l}    (K_c, K_g, prod(level_l shape)) int32  positions into ids
+        valid_{l}  (K_c, K_g, *level_l shape) bool        lvl >= 0
+        cache_epochs (K_c,) int64  per-clique refresh generation (uniform
+                                   *within* each clique, asserted; cliques
+                                   refresh independently so rows may differ)
     """
-    k = len(specs)
-    epochs = {s.cache_epoch for s in specs}
-    if len(epochs) != 1:
-        raise ValueError(f"pack_sharded_specs: specs span cache epochs "
-                         f"{sorted(epochs)}; one synchronized step must "
-                         "gather from one refresh generation")
-    n_pad = max(max(len(s.ids) for s in specs), 1)
+    groups = [list(gr) for gr in spec_groups]
+    if not groups or any(not gr for gr in groups):
+        raise ValueError("pack_sharded_specs: need one non-empty spec "
+                         "group per clique")
+    k_gs = {len(gr) for gr in groups}
+    if len(k_gs) != 1:
+        raise ValueError(f"pack_sharded_specs: ragged spec groups "
+                         f"{sorted(len(gr) for gr in groups)}; the "
+                         "(pod, clique) mesh needs one uniform K_g")
+    k_c, k_g = len(groups), k_gs.pop()
+    epochs = np.zeros(k_c, dtype=np.int64)
+    for ci, gr in enumerate(groups):
+        eps = {s.cache_epoch for s in gr}
+        if len(eps) != 1:
+            raise ValueError(f"pack_sharded_specs: clique {ci} specs span "
+                             f"cache epochs {sorted(eps)}; one synchronized "
+                             "step must gather from one refresh generation "
+                             "per clique")
+        epochs[ci] = gr[0].cache_epoch
+    flat = [s for gr in groups for s in gr]
+    n_pad = max(max(len(s.ids) for s in flat), 1)
     n_pad = -(-n_pad // bucket) * bucket
-    owner = np.full((k, n_pad), -1, dtype=np.int32)
-    local = np.zeros((k, n_pad), dtype=np.int32)
-    miss_rows = np.zeros((k, n_pad, feat_dim), dtype=np.float32)
-    for gi, s in enumerate(specs):
-        n = len(s.owner)
-        owner[gi, :n] = s.owner
-        local[gi, :n] = np.maximum(s.local_slot, 0)
-        mloc = np.flatnonzero(s.miss_inv >= 0) if s.miss_inv is not None \
-            else np.zeros(0, np.int64)
-        if len(mloc):
-            miss_rows[gi, mloc] = s.miss_feats[:s.n_miss, :feat_dim]
+    owner = np.full((k_c, k_g, n_pad), -1, dtype=np.int32)
+    local = np.zeros((k_c, k_g, n_pad), dtype=np.int32)
+    miss_rows = np.zeros((k_c, k_g, n_pad, feat_dim), dtype=np.float32)
+    for ci, gr in enumerate(groups):
+        for gi, s in enumerate(gr):
+            n = len(s.owner)
+            owner[ci, gi, :n] = s.owner
+            local[ci, gi, :n] = np.maximum(s.local_slot, 0)
+            mloc = np.flatnonzero(s.miss_inv >= 0) if s.miss_inv is not None \
+                else np.zeros(0, np.int64)
+            if len(mloc):
+                miss_rows[ci, gi, mloc] = s.miss_feats[:s.n_miss, :feat_dim]
     packed = {"owner": owner, "local": local, "miss_rows": miss_rows,
-              "labels": np.stack([s.labels for s in specs])}
-    n_levels = len(specs[0].levels)
+              "labels": np.stack([s.labels for s in flat]).reshape(
+                  (k_c, k_g) + flat[0].labels.shape)}
+    n_levels = len(flat[0].levels)
     for li in range(n_levels):
+        lvl_shape = flat[0].levels[li].shape
         packed[f"pos_{li}"] = np.stack(
-            [s.level_pos[li].reshape(-1).astype(np.int32) for s in specs])
+            [s.level_pos[li].reshape(-1).astype(np.int32) for s in flat]
+        ).reshape((k_c, k_g, -1))
         packed[f"valid_{li}"] = np.stack(
-            [s.levels[li] >= 0 for s in specs])
-    packed["cache_epoch"] = specs[0].cache_epoch
+            [s.levels[li] >= 0 for s in flat]).reshape(
+                (k_c, k_g) + lvl_shape)
+    packed["cache_epochs"] = epochs
     return packed
 
 

@@ -48,18 +48,23 @@ def make_gnn_batch(g: CSRGraph, cache, cfg: GNNConfig, seeds: np.ndarray,
     return builder.assemble(builder.build_spec(seeds, rng))
 
 
-def _make_sharded_step(cfg: GNNConfig, opt, mesh, axis: str, n_total: int,
+def _make_sharded_step(cfg: GNNConfig, opt, mesh, axes, n_total: int,
                        feat_dim: int, impl: str):
-    """Build the jitted clique-parallel train step.
+    """Build the jitted hierarchical (clique-parallel × data-parallel)
+    train step over the 2-D ``(pod, clique)`` mesh.
 
-    One ``shard_map`` over the clique axis does the whole device phase:
-    routed cache gather (local hits from the device's own partition, peer
-    hits via the intra-clique exchange), host-miss overlay, batch
-    assembly, per-shard loss/grad, and the per-clique ``psum`` that
-    combines gradients.  Per-shard losses are summed (not averaged) and
-    normalized by the clique-wide batch size after the psum, so the math
-    matches the single-device backends' mean over the concatenated batch
-    exactly.
+    One ``shard_map`` over both axes does the whole device phase.  All
+    cache traffic is intra-clique: the routed gather (local hits from the
+    device's own partition, peer hits via the peer exchange) reduces over
+    the ``clique`` axis only, so no feature row ever crosses a clique
+    boundary — each pod row serves batches from its own clique's unified
+    cache, exactly the paper's hierarchical design.  Gradients combine
+    with one ``psum`` over *both* axes (intra-clique NVLink/ICI + the
+    inter-clique data-parallel reduction): per-shard losses are summed
+    (not averaged) and normalized by the mesh-wide batch size after the
+    psum, so the math matches the single-device backends' mean over the
+    concatenated batch exactly.  A single clique is the degenerate
+    ``K_c=1`` mesh — same code path.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -67,20 +72,23 @@ def _make_sharded_step(cfg: GNNConfig, opt, mesh, axis: str, n_total: int,
     from repro.launch.mesh import shard_map_compat
 
     D = feat_dim
+    pod_axis, clique_axis = axes
+    P2 = P(pod_axis, clique_axis)
 
     def body(params, shards, packed):
-        shard = shards[0]                      # (R, Dp): my cache partition
+        shard = shards[0, 0]                   # (R, Dp): my cache partition
         if shard.shape[0] == 0:                # empty cache: all host fill
-            feats = packed["miss_rows"][0]
+            feats = packed["miss_rows"][0, 0]
         else:
-            feats = routed_gather(shard, packed["owner"][0],
-                                  packed["local"][0], axis, impl=impl)
-            feats = feats[:, :D] + packed["miss_rows"][0]
-        batch = {"labels": packed["labels"][0]}
+            feats = routed_gather(shard, packed["owner"][0, 0],
+                                  packed["local"][0, 0], clique_axis,
+                                  impl=impl)
+            feats = feats[:, :D] + packed["miss_rows"][0, 0]
+        batch = {"labels": packed["labels"][0, 0]}
         li = 0
         while f"pos_{li}" in packed:
-            valid = packed[f"valid_{li}"][0]
-            f = feats[packed[f"pos_{li}"][0]].reshape(valid.shape + (D,))
+            valid = packed[f"valid_{li}"][0, 0]
+            f = feats[packed[f"pos_{li}"][0, 0]].reshape(valid.shape + (D,))
             batch[f"feats_{li}"] = f * valid[..., None].astype(f.dtype)
             if li > 0:
                 batch[f"mask_{li}"] = valid
@@ -96,13 +104,13 @@ def _make_sharded_step(cfg: GNNConfig, opt, mesh, axis: str, n_total: int,
 
         (loss_sum, acc_sum), grads = jax.value_and_grad(
             local_sum_loss, has_aux=True)(params)
-        loss = jax.lax.psum(loss_sum, axis) / n_total
-        acc = jax.lax.psum(acc_sum, axis) / n_total
+        loss = jax.lax.psum(loss_sum, axes) / n_total
+        acc = jax.lax.psum(acc_sum, axes) / n_total
         grads = jax.tree.map(lambda x: x / n_total,
-                             jax.lax.psum(grads, axis))
+                             jax.lax.psum(grads, axes))
         return grads, loss, acc
 
-    smapped = shard_map_compat(body, mesh, in_specs=(P(), P(axis), P(axis)),
+    smapped = shard_map_compat(body, mesh, in_specs=(P(), P2, P2),
                                out_specs=(P(), P(), P()))
 
     @jax.jit
@@ -157,12 +165,17 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     capped at cpu_count-1 — serial on small hosts); per-device spec
     builds of one step run concurrently, the refresh hook stays
     serialized with all of them.
-    ``"sharded"`` is the clique-parallel executor: ``devices`` must span
-    exactly one NVLink/ICI clique, each mesh device holds its own cache
-    partition (``CliqueCache.sharded_device_arrays``), batch gathers are
-    routed by the ownership map under ``shard_map`` (local-hit gather on
-    the owning device, intra-clique peer exchange, host fill only for
-    true misses), and gradients combine with one per-clique ``psum``.
+    ``"sharded"`` is the hierarchical clique-parallel executor over the
+    2-D ``(pod, clique)`` mesh: ``devices`` must cover whole NVLink/ICI
+    cliques (any number of complete, equal-sized cliques; the default —
+    every plan device — runs the full hierarchy, one clique is the
+    degenerate ``K_c=1`` mesh).  Each mesh position holds its own clique's
+    cache partition (``CliqueCache.sharded_device_arrays``, stacked per
+    clique by ``stack_hierarchical_shards``), batch gathers are routed by
+    the ownership map under ``shard_map`` (local-hit gather on the owning
+    device, peer exchange strictly *intra*-clique — feature rows never
+    cross cliques), and gradients combine with one ``psum`` over both
+    axes (cliques train data-parallel, the paper's §4.1 hierarchy).
     It needs ``len(jax.devices()) >= len(devices)`` — simulate on CPU
     with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 
@@ -185,25 +198,28 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     # degrade to the host pipeline (nothing device-resident to gather
     # from) and the result reports the backend that actually ran
     backend = backend if plan is not None else "host"
+    exec_clique_ids, exec_cliques = None, None
     if backend == "sharded":
         if mesh is not None or compress_grads:
             raise ValueError(
-                "backend='sharded' builds its own clique mesh and combines "
-                "gradients with a per-clique psum; it does not compose "
-                "with mesh=/compress_grads= (use backend='device' for the "
-                "DP-mesh path)")
-        cliques = {plan.partition.clique_of_device(d) for d in devices}
-        if len(cliques) != 1:
+                "backend='sharded' builds its own hierarchical (pod, "
+                "clique) mesh and combines gradients with one psum over "
+                "both axes; it does not compose with mesh=/compress_grads= "
+                "(use backend='device' for the DP-mesh path)")
+        # devices must cover whole NVLink/ICI cliques (each clique's cache
+        # is partitioned across all of its devices); any number of complete
+        # cliques trains hierarchically, one clique is the K_c=1 case
+        exec_clique_ids, exec_cliques = \
+            plan.partition.execution_cliques(devices)
+        sizes = sorted({len(c) for c in exec_cliques})
+        if len(sizes) != 1:
             raise ValueError(
-                f"backend='sharded' executes one NVLink/ICI clique; devices "
-                f"{list(devices)} span cliques {sorted(cliques)}")
-        clique_devs = list(plan.partition.cliques[next(iter(cliques))])
-        if set(devices) != set(clique_devs):
-            raise ValueError(
-                f"backend='sharded' needs every device of the clique (cache "
-                f"partitions cover all of {clique_devs}; got {list(devices)})")
-        # clique-local order == shard stacking order == mesh position
-        devices = clique_devs
+                f"backend='sharded' needs uniform clique sizes for the "
+                f"(pod, clique) mesh; cliques {exec_clique_ids} have sizes "
+                f"{[len(c) for c in exec_cliques]} — run ragged cliques as "
+                "separate jobs or replan with replan_on_topology_change")
+        # clique-major order == shard stacking order == mesh position
+        devices = [d for c in exec_cliques for d in c]
     n_dev = len(devices)
     per_dev = max(cfg.batch_size // max(n_dev, 1), 16)
     counter = counter if counter is not None else TrafficCounter.for_devices(devices)
@@ -289,15 +305,38 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                                          counter, d, **kw)
 
     sharded_step = None
-    clique_cache = None
+    clique_caches = None
+    shard_stack_memo = {}
     if backend == "sharded":
-        from repro.launch.mesh import CLIQUE_AXIS, make_clique_mesh
+        from repro.core.unified_cache import stack_hierarchical_shards
+        from repro.launch.mesh import (CLIQUE_AXIS, POD_AXIS,
+                                       make_hierarchical_mesh)
 
-        clique_cache = plan.cache_for_device(devices[0])
-        clique_mesh = make_clique_mesh(n_dev)
+        clique_caches = [plan.caches[ci] for ci in exec_clique_ids]
+        hier_mesh = make_hierarchical_mesh(exec_cliques)
         sharded_step = _make_sharded_step(
-            cfg, opt, clique_mesh, CLIQUE_AXIS, n_total=per_dev * n_dev,
-            feat_dim=g.feat_dim, impl=builders[devices[0]].gather)
+            cfg, opt, hier_mesh, (POD_AXIS, CLIQUE_AXIS),
+            n_total=per_dev * n_dev, feat_dim=g.feat_dim,
+            impl=builders[devices[0]].gather)
+
+        def hierarchical_shards(epochs):
+            """The (K_c, K_g, R, Dp) mesh tensor for one per-clique epoch
+            vector, memoized: cliques refresh independently, so the stack
+            rebuilds only when some clique's epoch moves.  Two entries are
+            retained — the same double-buffer horizon as the caches — so
+            queued steps straddling a refresh keep their stack alive.
+            A rebuild is one device-side restack (the per-clique inputs
+            are already HBM-resident and epoch-memoized per cache; only
+            the refreshed clique's shards crossed PCIe), paid once per
+            refresh *event*, never per step; an in-place row update
+            cannot do better here because R_max may change when a refresh
+            re-homes slot owners."""
+            if epochs not in shard_stack_memo:
+                while len(shard_stack_memo) >= 2:
+                    shard_stack_memo.pop(next(iter(shard_stack_memo)))
+                shard_stack_memo[epochs] = stack_hierarchical_shards(
+                    clique_caches, epochs)
+            return shard_stack_memo[epochs]
 
     def make_spec_fn(d: int):
         """Host phase of one device's part of a *synchronized* step.  One
@@ -318,28 +357,31 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         """Device phase: finalize every part and concatenate (==DP).  Runs
         on the consumer thread; with the device backend the cache gather is
         dispatched asynchronously and overlaps the in-flight train step.
-        The sharded backend dequeues an already-packed clique batch (the
-        Prefetcher's pack_fn ran on the worker); here it only resolves the
-        epoch-pinned shard stack the packed slots index into."""
+        The sharded backend dequeues an already-packed hierarchical batch
+        (the Prefetcher's pack_fn ran on the worker); here it only resolves
+        the epoch-pinned shard stack the packed slots index into."""
         if backend == "sharded":
             packed = dict(item)
-            epoch = packed.pop("cache_epoch")
-            shards = clique_cache.sharded_device_arrays(epoch)["feat_shards"]
-            return shards, packed
+            epochs = tuple(int(e) for e in packed.pop("cache_epochs"))
+            return hierarchical_shards(epochs), packed
         parts = [builders[d].finalize(s) for d, s in zip(devices, item)]
         if len(parts) == 1:
             return parts[0]
         return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
 
-    def pack_fn(specs):
-        """Sharded second host phase: mesh-layout pack, then hand each
-        spec's staging buffer back to its builder's pool."""
-        packed = pack_sharded_specs(specs, g.feat_dim, bucket=bucket)
-        for d, s in zip(devices, specs):
+    def pack_fn(spec_groups):
+        """Sharded second host phase: per-clique spec groups -> the 2-D
+        mesh-layout pack, then hand each spec's staging buffer back to its
+        builder's pool."""
+        packed = pack_sharded_specs(spec_groups, g.feat_dim, bucket=bucket)
+        for d, s in zip(devices, (s for gr in spec_groups for s in gr)):
             builders[d].release_spec(s)
         return packed
 
     prefetcher = Prefetcher(part_fns=[make_spec_fn(d) for d in devices],
+                            part_group_sizes=(
+                                [len(c) for c in exec_cliques]
+                                if backend == "sharded" else None),
                             workers=prefetch_workers, depth=prefetch_depth,
                             limit=max(steps - step0, 0),
                             pre_batch_hook=(manager.on_step

@@ -48,6 +48,7 @@ class Prefetcher:
                  pre_batch_hook: Optional[Callable[[int], None]] = None,
                  pack_fn: Optional[Callable[[dict], dict]] = None, *,
                  part_fns: Optional[List[Callable[[int], object]]] = None,
+                 part_group_sizes: Optional[List[int]] = None,
                  workers: Optional[int] = None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
@@ -71,9 +72,16 @@ class Prefetcher:
         ``workers=1`` builds serially in order.  The delivered list is
         always in ``part_fns`` order regardless of completion order.
 
+        ``part_group_sizes`` nests the delivered parts list: the flat
+        ``part_fns`` results (still built concurrently across the whole
+        pool) are regrouped into consecutive sublists of these sizes — the
+        hierarchical executor passes one group per clique, so ``pack_fn``
+        and the consumer see the clique structure directly instead of
+        re-slicing a flat device list.
+
         ``pack_fn`` is an optional second host phase applied to each
         built batch on the coordinator thread (timed separately in
-        ``summary()``): the sharded executor packs per-device specs into
+        ``summary()``): the sharded executor packs per-clique specs into
         mesh-sharded arrays here, so the consumer thread dequeues batches
         that are already in device-shardable layout."""
         if (batch_fn is None) == (part_fns is None):
@@ -82,6 +90,16 @@ class Prefetcher:
         self._part_fns = list(part_fns) if part_fns is not None else None
         if self._part_fns is not None and not self._part_fns:
             raise ValueError("part_fns must not be empty")
+        self._group_sizes = (list(part_group_sizes)
+                             if part_group_sizes is not None else None)
+        if self._group_sizes is not None:
+            if self._part_fns is None:
+                raise ValueError("part_group_sizes needs part_fns")
+            if (any(s < 1 for s in self._group_sizes)
+                    or sum(self._group_sizes) != len(self._part_fns)):
+                raise ValueError(
+                    f"part_group_sizes {self._group_sizes} must be positive "
+                    f"and sum to len(part_fns) == {len(self._part_fns)}")
         n_parts = len(self._part_fns) if self._part_fns is not None else 1
         if workers is None:
             workers = max(1, (os.cpu_count() or 2) - 1)
@@ -106,16 +124,28 @@ class Prefetcher:
         self._exc_raised = False
         self._thread.start()
 
+    def _regroup(self, parts: List[object]) -> List[object]:
+        """Flat part results -> consecutive sublists of part_group_sizes
+        (identity without grouping)."""
+        if self._group_sizes is None:
+            return parts
+        out, i = [], 0
+        for sz in self._group_sizes:
+            out.append(parts[i:i + sz])
+            i += sz
+        return out
+
     def _build(self, step: int):
         if self._part_fns is None:
             return self._batch_fn(step)
         if self._pool is None:
-            return [fn(step) for fn in self._part_fns]
+            return self._regroup([fn(step) for fn in self._part_fns])
         futs = [self._pool.submit(fn, step) for fn in self._part_fns]
         # barrier: every part of step i lands before this returns (and so
         # before the next pre_batch_hook), even if one of them failed
         wait(futs)
-        return [f.result() for f in futs]  # raises the first part failure
+        # f.result() raises the first part failure
+        return self._regroup([f.result() for f in futs])
 
     def _worker(self):
         try:

@@ -1,0 +1,176 @@
+"""Hierarchical (multi-clique) executor checks — the body of
+tests/test_hierarchy.py.
+
+Importable so the checks can run two ways:
+
+* in-process, when the interpreter already sees >= 8 jax devices (the CI
+  ``multidevice`` job launches pytest with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+* as a spawned subprocess that sets the flag itself (single-device local
+  runs), keeping the main pytest process on 1 device.
+
+Run directly: ``python tests/_hierarchy_checks.py <path-to-src>``.
+"""
+import numpy as np
+
+N_DEV = 8
+
+
+def _make_problem(kind, n_gpus, seed=9):
+    from repro.core.cliques import topology_matrix
+    from repro.core.planner import build_plan
+    from repro.graph.csr import powerlaw_graph
+    from repro.models.gnn import GNNConfig
+
+    g = powerlaw_graph(3000, 8, seed=seed, feat_dim=16)
+    plan = build_plan(g, topology_matrix(kind, n_gpus),
+                      mem_per_device=300_000, batch_size=256, seed=0)
+    cfg = GNNConfig(feat_dim=16, hidden=32, batch_size=64, fanouts=(4, 2),
+                    lr=3e-3)
+    return g, plan, cfg
+
+
+def _train(g, plan, cfg, backend, steps, **kw):
+    from repro.core.unified_cache import TrafficCounter
+    from repro.train.loop import train_gnn
+
+    counter = TrafficCounter.for_plan(plan)
+    res = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=counter,
+                    backend=backend, gather="xla", **kw)
+    return res, counter
+
+
+def _assert_intra_clique_only(counter, cliques):
+    """The paper's hierarchy invariant: feature-gather peer traffic stays
+    inside each clique — ZERO bytes between devices of different cliques."""
+    cross = counter.cross_clique_bytes(cliques)
+    assert cross == 0, f"{cross} feature bytes crossed clique boundaries"
+
+
+def check_hierarchical_mesh():
+    """Mesh construction: (pod, clique) shape from the plan's clique list;
+    ragged clique sizes are rejected before any device is touched."""
+    from repro.launch.mesh import (CLIQUE_AXIS, POD_AXIS,
+                                   make_hierarchical_mesh)
+
+    mesh = make_hierarchical_mesh([[0, 1, 2, 3], [4, 5, 6, 7]])
+    assert mesh.axis_names == (POD_AXIS, CLIQUE_AXIS)
+    assert mesh.devices.shape == (2, 4)
+    mesh = make_hierarchical_mesh([[0, 1], [2, 3], [4, 5], [6, 7]])
+    assert mesh.devices.shape == (4, 2)
+    for bad in ([], [[0, 1, 2, 3], [4, 5]], [[]]):
+        try:
+            make_hierarchical_mesh(bad)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"cliques={bad} should have been rejected")
+    print("hierarchical mesh OK")
+
+
+def check_two_clique_parity():
+    """The PR acceptance gate: a dgx-v100-style 2x4 hierarchical run
+    matches the single-device baseline loss trajectory within 1 ulp of
+    accumulated divergence per step on identical seeds, with bit-identical
+    traffic accounting and ZERO cross-clique feature-gather bytes."""
+    g, plan, cfg = _make_problem("dgx-v100", N_DEV)
+    assert plan.partition.cliques == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    steps = 12
+    r_h, c_h = _train(g, plan, cfg, "host", steps)
+    r_s, c_s = _train(g, plan, cfg, "sharded", steps)
+    assert r_s.backend == "sharded"
+
+    a = np.asarray(r_h.losses, dtype=np.float32)
+    b = np.asarray(r_s.losses, dtype=np.float32)
+    # per-step ulp distance, gated at <= 1 ulp of divergence accrued per
+    # step (step k may differ by at most k+1 ulp): the only float freedom
+    # is the psum association of the gradient/loss reduction
+    ulp = np.abs(a - b) / np.spacing(np.maximum(np.abs(a), np.abs(b)))
+    steps_idx = np.arange(1, steps + 1)
+    assert (ulp <= steps_idx).all(), f"loss divergence {ulp} ulp > 1/step"
+    np.testing.assert_allclose(r_h.accs, r_s.accs, rtol=0, atol=1e-6)
+
+    # accounting is shared host-path code: bit-identical across backends
+    assert (c_h.feature_requests, c_h.feature_hits, c_h.topo_requests,
+            c_h.topo_hits, c_h.pcie_transactions) == \
+           (c_s.feature_requests, c_s.feature_hits, c_s.topo_requests,
+            c_s.topo_hits, c_s.pcie_transactions)
+    np.testing.assert_array_equal(c_h.bytes_matrix, c_s.bytes_matrix)
+
+    _assert_intra_clique_only(c_s, plan.partition.cliques)
+    for pc in c_s.per_clique_split(plan.partition.cliques):
+        assert pc["peer_bytes"] > 0, \
+            f"clique {pc['clique']} routed no intra-clique peer traffic"
+    print("two-clique (2x4) parity OK")
+
+
+def check_siton_4x2():
+    """The paper's siton topology (K_c=4, K_g=2): four cliques train
+    data-parallel, traffic strictly intra-clique."""
+    g, plan, cfg = _make_problem("siton", N_DEV)
+    assert [len(c) for c in plan.partition.cliques] == [2, 2, 2, 2]
+    steps = 6
+    r_h, c_h = _train(g, plan, cfg, "host", steps)
+    r_s, c_s = _train(g, plan, cfg, "sharded", steps)
+    assert np.isfinite(r_s.losses).all()
+    np.testing.assert_allclose(r_h.losses, r_s.losses, rtol=0, atol=1e-4)
+    np.testing.assert_array_equal(c_h.bytes_matrix, c_s.bytes_matrix)
+    _assert_intra_clique_only(c_s, plan.partition.cliques)
+    print("siton (4x2) parity OK")
+
+
+def check_subset_of_cliques():
+    """Running a subset of complete cliques works (2 of the 4 siton
+    cliques -> a 2x2 mesh), and the subset's traffic never touches the
+    excluded cliques' devices."""
+    g, plan, cfg = _make_problem("siton", N_DEV)
+    devs = plan.partition.cliques[0] + plan.partition.cliques[2]
+    r, c = _train(g, plan, cfg, "sharded", 4, devices=list(devs))
+    assert np.isfinite(r.losses).all()
+    _assert_intra_clique_only(c, plan.partition.cliques)
+    idle = [d for ci in (1, 3) for d in plan.partition.cliques[ci]]
+    assert c.bytes_matrix[idle].sum() == 0
+    print("clique-subset execution OK")
+
+
+def check_multi_clique_refresh():
+    """The online cache manager refreshes every clique independently under
+    the hierarchical executor: refresh epochs are tracked per clique and
+    the run stays finite (epoch-pinned shard stacks per clique)."""
+    from repro.core.cache_manager import RefreshConfig
+
+    g, plan, cfg = _make_problem("dgx-v100", N_DEV)
+    rc = RefreshConfig(interval=4, min_batches=1, drift_threshold=1.0)
+    r, c = _train(g, plan, cfg, "sharded", 10, refresh_config=rc)
+    assert np.isfinite(r.losses).all()
+    assert r.refresh["checks"] >= 2
+    # drift_threshold=1.0 forces refreshes on both cliques' caches
+    assert r.refresh["refreshes"] >= 2
+    assert {e["clique"] for e in r.refresh["events"]} == {0, 1}
+    _assert_intra_clique_only(c, plan.partition.cliques)
+    print("multi-clique online refresh OK")
+
+
+def main():
+    import jax
+
+    assert jax.device_count() >= N_DEV, (
+        f"need {N_DEV} devices, have {jax.device_count()}; set XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={N_DEV} before jax import")
+    check_hierarchical_mesh()
+    check_two_clique_parity()
+    check_siton_4x2()
+    check_subset_of_cliques()
+    check_multi_clique_refresh()
+    print("ALL HIERARCHY OK")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={N_DEV}")
+    if len(sys.argv) > 1:
+        sys.path.insert(0, sys.argv[1])
+    main()

@@ -124,7 +124,8 @@ def check_sharded_epoch_pinning():
 
 
 def check_clique_validation():
-    """Device sets that do not span exactly one clique are rejected."""
+    """Device sets that partially cover a clique are rejected; whole
+    cliques — one, or several at once (the hierarchical mesh) — train."""
     from repro.core.cliques import topology_matrix
     from repro.core.planner import build_plan
     from repro.graph.csr import powerlaw_graph
@@ -135,17 +136,21 @@ def check_clique_validation():
     cfg = GNNConfig(feat_dim=16, hidden=32, batch_size=64, fanouts=(4, 2))
     plan = build_plan(g, topology_matrix("nv2", 4), mem_per_device=200_000,
                       batch_size=256, seed=0)  # two 2-cliques
-    for bad in ([0, 1, 2, 3], [0]):
+    for bad in ([0], [0, 1, 2]):
         try:
             train_gnn(g, plan, cfg, steps=1, backend="sharded", devices=bad)
         except ValueError:
             pass
         else:
             raise AssertionError(f"devices={bad} should have been rejected")
-    # a full single clique is fine
+    # a full single clique is the degenerate K_c=1 hierarchy
     res = train_gnn(g, plan, cfg, steps=2, backend="sharded", devices=[1, 0],
                     gather="xla")
     assert len(res.losses) == 2 and np.isfinite(res.losses).all()
+    # both cliques at once: the 2x2 hierarchical mesh
+    res2 = train_gnn(g, plan, cfg, steps=2, backend="sharded",
+                     devices=[2, 0, 3, 1], gather="xla")
+    assert len(res2.losses) == 2 and np.isfinite(res2.losses).all()
     print("clique validation OK")
 
 

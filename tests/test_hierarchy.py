@@ -1,0 +1,86 @@
+"""Hierarchical multi-clique executor: the 2-D ``(pod, clique)`` mesh,
+per-clique unified caches, cross-clique data parallelism — see
+tests/_hierarchy_checks.py for the check bodies (2x4 parity vs the
+single-device baseline, zero cross-clique feature-gather bytes, siton 4x2,
+clique subsets, per-clique online refresh).
+
+Runs in-process when the interpreter already sees >= 8 devices (the CI
+``multidevice`` job sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before pytest starts); otherwise spawns a subprocess that forces the device
+count itself, so the suite exercises the hierarchy even on a 1-device run.
+
+The validation-only tests below run on any device count: they exercise the
+clique-coverage and ragged-size error paths, which raise before a mesh is
+ever built.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import _hierarchy_checks
+
+from repro.core.cliques import clique_cover
+from repro.core.planner import build_plan
+from repro.graph.csr import powerlaw_graph
+from repro.models.gnn import GNNConfig
+from repro.train.loop import train_gnn
+
+
+def _ragged_topo():
+    """A degraded box: one 4-clique plus one 2-clique (6 devices)."""
+    adj = np.zeros((6, 6), dtype=bool)
+    for a in range(4):
+        for b in range(4):
+            adj[a, b] = a != b
+    adj[4, 5] = adj[5, 4] = True
+    return adj
+
+
+def test_ragged_cliques_rejected_before_mesh():
+    """Ragged clique sizes cannot form a (pod, clique) mesh: train_gnn
+    rejects them with a clear error on any device count (no mesh, no
+    XLA flag needed)."""
+    topo = _ragged_topo()
+    assert [len(c) for c in clique_cover(topo)] == [4, 2]
+    g = powerlaw_graph(1500, 6, seed=1, feat_dim=8)
+    plan = build_plan(g, topo, mem_per_device=100_000, batch_size=128,
+                      seed=0)
+    cfg = GNNConfig(feat_dim=8, hidden=16, batch_size=48, fanouts=(3, 2))
+    with pytest.raises(ValueError, match="uniform clique sizes"):
+        train_gnn(g, plan, cfg, steps=1, backend="sharded")
+    # one complete clique of the ragged box is still the K_c=1 case —
+    # validation passes (the run itself needs >= 4 devices, so only
+    # exercise it when they exist)
+    if jax.device_count() >= 4:
+        res = train_gnn(g, plan, cfg, steps=2, backend="sharded",
+                        devices=[0, 1, 2, 3], gather="xla")
+        assert np.isfinite(res.losses).all()
+
+
+def test_partial_clique_rejected():
+    g = powerlaw_graph(1500, 6, seed=1, feat_dim=8)
+    plan = build_plan(g, _ragged_topo(), mem_per_device=100_000,
+                      batch_size=128, seed=0)
+    cfg = GNNConfig(feat_dim=8, hidden=16, batch_size=48, fanouts=(3, 2))
+    with pytest.raises(ValueError, match="all-or-nothing"):
+        train_gnn(g, plan, cfg, steps=1, backend="sharded",
+                  devices=[0, 1, 4, 5])
+
+
+def test_hierarchy_suite():
+    if jax.device_count() >= _hierarchy_checks.N_DEV:
+        _hierarchy_checks.main()
+        return
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "_hierarchy_checks.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{_hierarchy_checks.N_DEV}")
+    r = subprocess.run([sys.executable, script, src], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL HIERARCHY OK" in r.stdout

@@ -34,7 +34,80 @@ def test_hierarchical_tablets(g, kind, k_c, k_g):
     allv = np.concatenate([plan.tablets[d] for d in range(8)])
     # S3/S4: tablets partition the training set exactly
     assert sorted(allv.tolist()) == sorted(train.tolist())
-    # intra-clique hash split: tablet sizes balanced within a clique
+    # round-robin split: tablet sizes balanced to one vertex within a clique
     for c in plan.cliques:
         sizes = [len(plan.tablets[d]) for d in c]
-        assert max(sizes) - min(sizes) <= 0.2 * max(sizes) + 16
+        assert max(sizes) - min(sizes) <= 1
+
+
+@pytest.mark.parametrize("stride", [2, 4])
+def test_tablet_balance_strided_train_ids(g, stride):
+    """Regression: the old ``tv % k_g`` hash split collapsed onto a subset
+    of a clique's devices whenever train ids were strided or
+    parity-correlated (stride 2 on a K_g=2 clique left every odd device an
+    EMPTY tablet).  The seeded-permutation round-robin balances to <= 1
+    for any id layout."""
+    train = np.arange(0, g.n, stride)  # all ids share residues mod stride
+    for kind in ("nv2", "nv4"):
+        plan = hierarchical_partition(g, train, topology_matrix(kind))
+        for c in plan.cliques:
+            sizes = [len(plan.tablets[d]) for d in c]
+            assert max(sizes) - min(sizes) <= 1, (kind, c, sizes)
+            assert min(sizes) > 0, f"empty tablet on {kind} clique {c}"
+
+
+@pytest.mark.parametrize("kind,n_gpus", [("nv2", 8), ("nv4", 8), ("nv8", 8),
+                                         ("tpu-2pod", 8), ("nv2", 4),
+                                         ("nonv", 4)])
+def test_topology_partition_round_trip(g, kind, n_gpus):
+    """topology_matrix x hierarchical_partition round-trips: tablets are
+    disjoint and cover train_vertices exactly, vertex_part aligns with the
+    clique count, and every device resolves to its containing clique."""
+    topo = topology_matrix(kind, n_gpus)
+    train = np.arange(0, g.n, 3)
+    plan = hierarchical_partition(g, train, topo)
+    # S1: every device lands in exactly one clique
+    members = sorted(d for c in plan.cliques for d in c)
+    assert members == list(range(n_gpus))
+    # S2: vertex_part ids align with the clique count
+    assert plan.vertex_part.shape == (g.n,)
+    assert plan.vertex_part.min() >= 0
+    assert plan.vertex_part.max() < plan.k_c
+    # S3/S4: tablets partition train_vertices (disjoint + full coverage)
+    allv = np.concatenate([plan.tablets[d] for d in range(n_gpus)])
+    assert len(allv) == len(train)
+    assert np.array_equal(np.sort(allv), train)
+    # device -> clique lookup agrees with membership
+    for ci, c in enumerate(plan.cliques):
+        for d in c:
+            assert plan.clique_of_device(d) == ci
+
+
+def test_clique_of_device_unknown_raises(g):
+    plan = hierarchical_partition(g, np.arange(0, g.n, 5),
+                                  topology_matrix("nv4"))
+    for bad in (8, 99, -1):
+        with pytest.raises(KeyError):
+            plan.clique_of_device(bad)
+
+
+def test_execution_cliques_validation(g):
+    plan = hierarchical_partition(g, np.arange(0, g.n, 5),
+                                  topology_matrix("nv2"))  # four 2-cliques
+    cids, cliques = plan.execution_cliques([3, 2, 0, 1])
+    assert cids == [0, 1] and cliques == [[0, 1], [2, 3]]
+    with pytest.raises(ValueError):
+        plan.execution_cliques([0, 1, 2])  # half of clique {2, 3}
+
+
+def test_unknown_topology_kind_raises():
+    with pytest.raises(KeyError):
+        topology_matrix("warp-drive", 8)
+
+
+def test_unknown_partition_method_raises(g):
+    with pytest.raises(KeyError):
+        partition_graph(g, 4, method="metis-but-wrong")
+    with pytest.raises(KeyError):
+        hierarchical_partition(g, np.arange(0, g.n, 5),
+                               topology_matrix("nv4"), method="nope")
