@@ -591,6 +591,21 @@ def bench_hierarchy_scaling() -> List[tuple]:
     return run_hierarchy(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
 
 
+def bench_topology_scaling() -> List[tuple]:
+    """Beyond-paper: the sharded topology cache vs the equal-memory
+    replicated baseline on a 4-device clique, plus a full-coverage
+    sync-free arm and a 2x2 hierarchy arm — each in its own subprocess.
+    HARD gates: bitwise-identical losses across residency layouts, every
+    shard within the same per-device budget, >= 4x fewer host-sampled
+    edges under sharding, zero host sampling syncs when the topology is
+    fully covered, and zero cross-clique neighbor-exchange bytes on the
+    hierarchy.  Structured results land in BENCH_topology.json.  See
+    benchmarks/topology_scaling.py."""
+    from benchmarks.topology_scaling import run_topology
+
+    return run_topology(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -608,4 +623,5 @@ ALL_BENCHES = [
     ("cache_refresh", bench_cache_refresh),
     ("clique_scaling", bench_clique_scaling),
     ("hierarchy_scaling", bench_hierarchy_scaling),
+    ("topology_scaling", bench_topology_scaling),
 ]

@@ -36,6 +36,11 @@ class LegionPlan:
     caches: List[CliqueCache]
     mem_per_device: float
     timings: Dict[str, float]
+    # how each clique spends its per-device topology budget: "sharded"
+    # (disjoint per-device shards, union ~K_g x bt — served by the routed
+    # neighbor exchange) or "replicated" (bt-byte union on every device —
+    # the equal-memory baseline)
+    topology_mode: str = "sharded"
 
     def cache_for_device(self, dev: int) -> CliqueCache:
         return self.caches[self.partition.clique_of_device(dev)]
@@ -47,7 +52,8 @@ def build_plan(g: CSRGraph, topo_matrix: np.ndarray, mem_per_device: float,
                fanouts: Sequence[int] = (25, 10), batch_size: int = 1024,
                partition_method: str = "ldg", planner: str = "alpha_sweep",
                presample_epochs: int = 1, seed: int = 0,
-               materialize_caches: bool = True) -> LegionPlan:
+               materialize_caches: bool = True,
+               topology_mode: str = "sharded") -> LegionPlan:
     timings = {}
     rng = np.random.default_rng(seed)
     if train_vertices is None:
@@ -79,11 +85,13 @@ def build_plan(g: CSRGraph, topo_matrix: np.ndarray, mem_per_device: float,
         plan["cost_model"] = cm
         plans.append(plan)
         caches.append(build_clique_cache(g, devices, res, plan, mem_per_device,
-                                         materialize=materialize_caches))
+                                         materialize=materialize_caches,
+                                         topology_mode=topology_mode))
     timings["plan_s"] = time.perf_counter() - t0
     return LegionPlan(partition=part, stats=stats, cslp=cslps,
                       cost_plans=plans, caches=caches,
-                      mem_per_device=mem_per_device, timings=timings)
+                      mem_per_device=mem_per_device, timings=timings,
+                      topology_mode=topology_mode)
 
 
 def replan_cache_from_hotness(g: CSRGraph, plan: LegionPlan, clique_idx: int,
@@ -105,8 +113,10 @@ def replan_cache_from_hotness(g: CSRGraph, plan: LegionPlan, clique_idx: int,
     B = plan.mem_per_device * len(devices)
     cost_plan = cm.plan_knapsack(B) if planner == "knapsack" else cm.plan(B)
     cost_plan["cost_model"] = cm
+    mode = plan.caches[clique_idx].topology_mode
     feat_ids, topo_ids = plan_cache_contents(g, len(devices), res, cost_plan,
-                                             plan.mem_per_device)
+                                             plan.mem_per_device,
+                                             topology_mode=mode)
     return res, cost_plan, feat_ids, topo_ids
 
 
@@ -168,7 +178,8 @@ def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
         B = mem * len(devices)
         plan = cm.plan_knapsack(B) if planner == "knapsack" else cm.plan(B)
         plans.append(plan)
-        caches.append(build_clique_cache(g, devices, res, plan, mem))
+        caches.append(build_clique_cache(g, devices, res, plan, mem,
+                                         topology_mode=old.topology_mode))
 
     part = PartitionPlan(cliques=new_cliques,
                          vertex_part=old.partition.vertex_part,
@@ -177,4 +188,5 @@ def replan_on_topology_change(g: CSRGraph, old: LegionPlan,
     return LegionPlan(partition=part, stats=stats, cslp=cslps,
                       cost_plans=plans, caches=caches,
                       mem_per_device=mem,
-                      timings={"replan": True})
+                      timings={"replan": True},
+                      topology_mode=old.topology_mode)

@@ -30,11 +30,25 @@ class TrafficCounter:
     n_devices: int
     # traffic[dst, src]: src == n_devices means CPU (PCIe); else peer device
     bytes_matrix: np.ndarray = None
+    # topology-exchange traffic, same [dst, src] layout: sampled neighbor
+    # ids served by the owner shard (diagonal = own shard, off-diagonal =
+    # the routed neighbor exchange's intra-clique hops).  Kept separate
+    # from bytes_matrix so feature-gather accounting stays bit-identical
+    # between the replicated and sharded topology layouts.
+    topo_bytes_matrix: np.ndarray = None
     pcie_transactions: int = 0
     feature_requests: int = 0
     feature_hits: int = 0
     topo_requests: int = 0
     topo_hits: int = 0
+    # sampling's host-CSR fallback: spec builds that had to touch the host
+    # CSR at all (one *deferred, batched* resolve per build — zero on a
+    # warm epoch whose frontier fits the cached topology), and the neighbor
+    # draws those resolves produced (miss rows x fanout; counterfactual
+    # for the host backend, exact for device/sharded after the
+    # stale-parent fix routes cached children through the owner shard)
+    host_sample_syncs: int = 0
+    host_sampled_edges: int = 0
     # guards the scalar tallies when several prefetch workers account
     # concurrently (integer adds commute, so totals stay bit-identical
     # regardless of build interleaving; the lock only prevents lost updates)
@@ -44,6 +58,9 @@ class TrafficCounter:
     def __post_init__(self):
         if self.bytes_matrix is None:
             self.bytes_matrix = np.zeros(
+                (self.n_devices, self.n_devices + 1), dtype=np.int64)
+        if self.topo_bytes_matrix is None:
+            self.topo_bytes_matrix = np.zeros(
                 (self.n_devices, self.n_devices + 1), dtype=np.int64)
 
     @classmethod
@@ -59,11 +76,14 @@ class TrafficCounter:
 
     def merge(self, other: "TrafficCounter"):
         self.bytes_matrix += other.bytes_matrix
+        self.topo_bytes_matrix += other.topo_bytes_matrix
         self.pcie_transactions += other.pcie_transactions
         self.feature_requests += other.feature_requests
         self.feature_hits += other.feature_hits
         self.topo_requests += other.topo_requests
         self.topo_hits += other.topo_hits
+        self.host_sample_syncs += other.host_sample_syncs
+        self.host_sampled_edges += other.host_sampled_edges
 
     @property
     def feature_hit_rate(self) -> float:
@@ -73,19 +93,31 @@ class TrafficCounter:
     def topo_hit_rate(self) -> float:
         return self.topo_hits / max(self.topo_requests, 1)
 
-    def cross_clique_bytes(self, cliques: Sequence[Sequence[int]]) -> int:
-        """Device-to-device bytes between devices of *different* cliques.
-        The hierarchical executor's invariant is that this is exactly 0 —
-        feature rows only travel intra-clique (peer exchange) or over
-        PCIe (host fill); tests and the hierarchy benchmark gate on it."""
+    @staticmethod
+    def _cross_clique(matrix: np.ndarray,
+                      cliques: Sequence[Sequence[int]]) -> int:
         total = 0
         for ci, devs in enumerate(cliques):
             others = [d for cj, c in enumerate(cliques) if cj != ci
                       for d in c]
             if others:
-                total += int(self.bytes_matrix[
-                    np.ix_(list(devs), others)].sum())
+                total += int(matrix[np.ix_(list(devs), others)].sum())
         return total
+
+    def cross_clique_bytes(self, cliques: Sequence[Sequence[int]]) -> int:
+        """Device-to-device bytes between devices of *different* cliques.
+        The hierarchical executor's invariant is that this is exactly 0 —
+        feature rows only travel intra-clique (peer exchange) or over
+        PCIe (host fill); tests and the hierarchy benchmark gate on it."""
+        return self._cross_clique(self.bytes_matrix, cliques)
+
+    def cross_clique_topo_bytes(self, cliques: Sequence[Sequence[int]]) -> int:
+        """Topology-exchange bytes between devices of different cliques.
+        The sharded topology cache's invariant mirrors the feature one:
+        every frontier row is served by an owner shard *within* the
+        requester's clique (or by the host over PCIe), so this is exactly
+        0 — the topology benchmark and the sharded suite gate on it."""
+        return self._cross_clique(self.topo_bytes_matrix, cliques)
 
     def per_clique_split(self, cliques: Sequence[Sequence[int]]) -> list:
         """Feature-gather traffic aggregated per clique: local-hit bytes
@@ -107,12 +139,25 @@ class TrafficCounter:
 class CliqueCache:
     """One clique's unified cache."""
 
+    TOPOLOGY_MODES = ("sharded", "replicated")
+
     def __init__(self, g: CSRGraph, devices: Sequence[int],
                  feat_ids_per_dev: Sequence[np.ndarray],
                  topo_ids_per_dev: Sequence[np.ndarray],
-                 materialize: bool = True):
+                 materialize: bool = True,
+                 topology_mode: str = "sharded"):
+        if topology_mode not in self.TOPOLOGY_MODES:
+            raise ValueError(f"unknown topology_mode {topology_mode!r} "
+                             f"(expected one of {self.TOPOLOGY_MODES})")
         self.g = g
         self.devices = list(devices)
+        # "sharded" (default): each device holds only the CSR rows the plan
+        # assigned to it; the union of shards is the cached topology, and
+        # sampling routes each frontier row to its owner shard (K_g x the
+        # topology per device budget).  "replicated": every device holds
+        # the whole union — the equal-contents legacy layout kept as the
+        # parity oracle and the equal-memory benchmark baseline.
+        self.topology_mode = topology_mode
         # ---- feature cache ----
         self.feat_pos = np.full(g.n, -1, dtype=np.int64)
         owners = []
@@ -127,7 +172,9 @@ class CliqueCache:
         self.feat_pos[self.feat_ids] = np.arange(len(self.feat_ids))
         self._materialized = materialize
         if materialize:
-            self.feat_cache = g.get_features(self.feat_ids) if len(self.feat_ids) else np.zeros((0, g.feat_dim), np.float32)
+            self.feat_cache = (g.get_features(self.feat_ids)
+                               if len(self.feat_ids)
+                               else np.zeros((0, g.feat_dim), np.float32))
         else:
             self.feat_cache = None
         # ---- topology cache (CSR subset) ----
@@ -148,30 +195,80 @@ class CliqueCache:
         # serialized with every build by the Prefetcher's step barrier.
         self._mat_lock = threading.RLock()
 
+    @staticmethod
+    def _subset_csr(g: CSRGraph, tids: np.ndarray):
+        """CSR subset for ``tids``: (indptr, indices) with row ``r`` holding
+        ``tids[r]``'s full adjacency in host order (the bit-parity anchor:
+        any sampler drawing ``r % deg`` offsets against it reproduces
+        ``host_sample_level`` exactly)."""
+        deg = (g.indptr[tids + 1] - g.indptr[tids]) if len(tids) \
+            else np.zeros(0, np.int64)
+        indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+        if len(tids):
+            # vectorized adjacency copy: slot k of the subset CSR maps to
+            # g.indices[g.indptr[tids[row]] + (k - indptr[row])]
+            starts = g.indptr[tids]
+            total = int(indptr[-1])
+            src = (np.arange(total, dtype=np.int64)
+                   - np.repeat(indptr[:-1], deg)
+                   + np.repeat(starts, deg))
+            indices = g.indices[src].astype(np.int32)
+        else:
+            indices = np.zeros(0, np.int32)
+        return indptr, indices
+
     def _build_topology(self, topo_ids_per_dev: Sequence[np.ndarray]) -> None:
-        """(Re)build the CSR-subset topology cache from per-device id lists."""
+        """(Re)build the topology cache from per-device id lists.
+
+        Always builds the *union* CSR subset (``topo_pos`` / ``cache_indptr``
+        / ``cache_indices``) — the host mirror every fallback resolve and
+        accounting pass reads, and the replicated layout's device residency.
+        In sharded mode additionally builds the per-device shard form: the
+        vertex->owner routing tables (``topo_owner`` / ``topo_local``) and
+        the padded per-shard CSR stacks (``topo_shard_indptr`` (k_g, R+1),
+        ``topo_shard_indices`` (k_g, E)) the routed neighbor exchange
+        gathers from.  Each shard stores its vertices' adjacency in host
+        order, so shard sampling is bit-identical to the union CSR."""
         g = self.g
-        tids = (np.concatenate([np.asarray(t) for t in topo_ids_per_dev])
-                if len(topo_ids_per_dev) else np.zeros(0, np.int64)).astype(np.int64)
+        per_dev = [np.asarray(t).astype(np.int64) for t in topo_ids_per_dev]
+        tids = (np.concatenate(per_dev) if per_dev
+                else np.zeros(0, np.int64))
         self.topo_ids = tids
+        self.topo_ids_per_dev = per_dev
         self.topo_pos = np.full(g.n, -1, dtype=np.int64)
         self.topo_pos[tids] = np.arange(len(tids))
-        deg = (g.indptr[tids + 1] - g.indptr[tids]) if len(tids) else np.zeros(0, np.int64)
+        deg = (g.indptr[tids + 1] - g.indptr[tids]) if len(tids) \
+            else np.zeros(0, np.int64)
         self.cache_indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
-        if self._materialized:
-            # vectorized adjacency copy: slot k of the cache CSR maps to
-            # g.indices[indptr[tids[row]] + (k - cache_indptr[row])]
-            if len(tids):
-                starts = g.indptr[tids]
-                total = int(self.cache_indptr[-1])
-                src = (np.arange(total, dtype=np.int64)
-                       - np.repeat(self.cache_indptr[:-1], deg)
-                       + np.repeat(starts, deg))
-                self.cache_indices = g.indices[src].astype(np.int32)
-            else:
-                self.cache_indices = np.zeros(0, np.int32)
-        else:
-            self.cache_indices = None
+        self.cache_indices = (self._subset_csr(g, tids)[1]
+                              if self._materialized else None)
+        self.topo_owner = None
+        self.topo_local = None
+        self.topo_shard_indptr = None
+        self.topo_shard_indices = None
+        if self.topology_mode != "sharded":
+            return
+        # vertex -> (owner shard, row within it); later lists win on
+        # duplicate ids, matching the union's topo_pos assignment order
+        self.topo_owner = np.full(g.n, -1, dtype=np.int32)
+        self.topo_local = np.zeros(g.n, dtype=np.int64)
+        for gi, ids in enumerate(per_dev):
+            self.topo_owner[ids] = gi
+            self.topo_local[ids] = np.arange(len(ids))
+        if not self._materialized:
+            return
+        k_g = max(len(self.devices), 1)
+        shard_csrs = [self._subset_csr(g, ids) for ids in per_dev]
+        shard_csrs += [self._subset_csr(g, np.zeros(0, np.int64))
+                       for _ in range(k_g - len(shard_csrs))]
+        R = max(len(p) - 1 for p, _ in shard_csrs)
+        E = max(max(len(ix) for _, ix in shard_csrs), 1)
+        self.topo_shard_indptr = np.zeros((k_g, R + 1), dtype=np.int64)
+        self.topo_shard_indices = np.zeros((k_g, E), dtype=np.int32)
+        for gi, (p, ix) in enumerate(shard_csrs):
+            self.topo_shard_indptr[gi, :len(p)] = p
+            self.topo_shard_indptr[gi, len(p):] = p[-1]  # pad rows: deg 0
+            self.topo_shard_indices[gi, :len(ix)] = ix
 
     # ---- device residency ----
     @staticmethod
@@ -231,8 +328,24 @@ class CliqueCache:
                         "cache_indices": jnp.asarray(self.cache_indices),
                         "topo_pos": jnp.asarray(self.topo_pos),
                     }
+                    self._device_arrays.update(self._topo_shard_jnp())
         return self._epoch_view(self._device_arrays,
                                 self._prev_device_arrays, epoch, "")
+
+    def _topo_shard_jnp(self) -> dict:
+        """jnp views of the sharded topology residency (empty dict in
+        replicated mode): the vertex->owner routing tables and the padded
+        per-shard CSR stacks.  Plain ``asarray`` aliasing is safe — like
+        the union CSR these arrays are replaced wholesale by
+        ``replace_topology``, never mutated in place."""
+        if self.topo_owner is None or self.topo_shard_indptr is None:
+            return {}
+        import jax.numpy as jnp
+
+        return {"topo_owner": jnp.asarray(self.topo_owner),
+                "topo_local": jnp.asarray(self.topo_local),
+                "topo_shard_indptr": jnp.asarray(self.topo_shard_indptr),
+                "topo_shard_indices": jnp.asarray(self.topo_shard_indices)}
 
     # ---- per-device shard views (clique-parallel executor) ----
     def shard_routing(self):
@@ -308,6 +421,11 @@ class CliqueCache:
                         "slot_owner": jnp.array(owner),
                         "slot_local": jnp.array(local),
                     }
+                    # topology shard stacks ride the same view: under the
+                    # clique mesh the leading (k_g) axis is sharded, so
+                    # each device holds exactly its own CSR shard and the
+                    # routed neighbor exchange serves peers over ICI
+                    self._sharded_arrays.update(self._topo_shard_jnp())
         return self._epoch_view(self._sharded_arrays,
                                 self._prev_sharded_arrays, epoch,
                                 " in sharded form")
@@ -434,7 +552,20 @@ class CliqueCache:
             new["cache_indptr"] = jnp.asarray(self.cache_indptr)
             new["cache_indices"] = jnp.asarray(self.cache_indices)
             new["topo_pos"] = jnp.asarray(self.topo_pos)
+            # drop any stale shard entries before re-adding (a refresh can
+            # legally flip the per-shard stack shapes)
+            for k in ("topo_owner", "topo_local", "topo_shard_indptr",
+                      "topo_shard_indices"):
+                new.pop(k, None)
+            new.update(self._topo_shard_jnp())
             self._device_arrays = new
+        if self._sharded_arrays is not None:
+            new = dict(self._sharded_arrays)
+            for k in ("topo_owner", "topo_local", "topo_shard_indptr",
+                      "topo_shard_indices"):
+                new.pop(k, None)
+            new.update(self._topo_shard_jnp())
+            self._sharded_arrays = new
 
     def feat_ids_by_device(self) -> List[np.ndarray]:
         """Current per-device cached feature ids (clique-local order) —
@@ -456,6 +587,13 @@ class CliqueCache:
         of shape (B, fanout) — the latter lets the device path replay the
         exact draws of the host sampler (bit-identical subgraphs, which the
         host/device parity tests rely on).
+
+        In sharded topology mode each row routes through its owner shard's
+        padded CSR (the single-process form of the routed neighbor
+        exchange — under the clique mesh the same lookup is the
+        ``kernels.gather.routed_neighbor_sample`` collective); every shard
+        stores its vertices' adjacency in host order, so the outputs are
+        bit-identical to the replicated layout and to the host sampler.
         Returns (neighbors (B, fanout) int32, hit_mask (B,) bool).
         """
         import jax
@@ -473,19 +611,32 @@ class CliqueCache:
             return (jnp.full(seeds.shape + (fanout,), -1, jnp.int32),
                     jnp.zeros(seeds.shape, bool))
         valid = seeds >= 0
-        pos = da["topo_pos"][jnp.where(valid, seeds, 0)]
-        hit = (pos >= 0) & valid
-        safe = jnp.maximum(pos, 0)
-        start = da["cache_indptr"][safe]
-        deg = da["cache_indptr"][safe + 1] - start
+        safe_seed = jnp.where(valid, seeds, 0)
         if rand is not None:
             r = jnp.asarray(rand)
         else:
             r = jax.random.randint(key, (seeds.shape[0], fanout), 0, 1 << 30)
-        offs = r % jnp.maximum(deg, 1)[:, None]
-        idx = jnp.minimum(start[:, None] + offs,
-                          max(len(self.cache_indices) - 1, 0))
-        out = da["cache_indices"][idx].astype(jnp.int32)
+        if self.topology_mode == "sharded":
+            own = da["topo_owner"][safe_seed]
+            hit = (own >= 0) & valid
+            o = jnp.maximum(own, 0)
+            loc = da["topo_local"][safe_seed]
+            start = da["topo_shard_indptr"][o, loc]
+            deg = da["topo_shard_indptr"][o, loc + 1] - start
+            offs = r % jnp.maximum(deg, 1)[:, None]
+            E = da["topo_shard_indices"].shape[1]
+            idx = jnp.minimum(start[:, None] + offs, E - 1)
+            out = da["topo_shard_indices"][o[:, None], idx].astype(jnp.int32)
+        else:
+            pos = da["topo_pos"][safe_seed]
+            hit = (pos >= 0) & valid
+            safe = jnp.maximum(pos, 0)
+            start = da["cache_indptr"][safe]
+            deg = da["cache_indptr"][safe + 1] - start
+            offs = r % jnp.maximum(deg, 1)[:, None]
+            idx = jnp.minimum(start[:, None] + offs,
+                              max(len(self.cache_indices) - 1, 0))
+            out = da["cache_indices"][idx].astype(jnp.int32)
         ok = hit & (deg > 0)
         return jnp.where(ok[:, None], out, -1), hit
 
@@ -524,7 +675,22 @@ class CliqueCache:
 
     @property
     def topo_bytes(self) -> int:
+        """Bytes of the cached topology *union* (adjacency + id map)."""
         return int(self.cache_indptr[-1]) * S_UINT32 + len(self.topo_ids) * S_UINT64
+
+    def topo_bytes_by_device(self) -> List[int]:
+        """Per-device topology residency: each device's own shard under
+        ``"sharded"`` (the union is spread across the clique), the whole
+        union on every device under ``"replicated"``.  This is the
+        honest per-device HBM cost the equal-memory benchmark equates."""
+        if self.topology_mode != "sharded":
+            return [self.topo_bytes for _ in self.devices]
+        out = []
+        for ids in self.topo_ids_per_dev:
+            deg = (self.g.indptr[ids + 1] - self.g.indptr[ids]) if len(ids) \
+                else np.zeros(0, np.int64)
+            out.append(int(deg.sum()) * S_UINT32 + len(ids) * S_UINT64)
+        return out
 
     # ---- accounting + extraction ----
     def split_hits(self, ids: np.ndarray):
@@ -581,7 +747,17 @@ class CliqueCache:
     def sample_accounting(self, srcs: np.ndarray, fanout: int,
                           counter: TrafficCounter, requester_dev: int):
         """Account one sampling level: adjacency reads of `srcs` hit the topo
-        cache or cost PCIe transactions (Eq. 3/4 granularity)."""
+        cache or cost PCIe transactions (Eq. 3/4 granularity).
+
+        The legacy counters (requests/hits/pcie/bytes_matrix) are mode-
+        independent by construction: the sharded and replicated layouts
+        cache the *same* vertex set, so the hit split is identical.  The
+        topology-specific exchange traffic lands in ``topo_bytes_matrix``:
+        each hit delivers its ``fanout`` sampled neighbor ids from the
+        owner shard (a peer column under sharded mode, the requester's own
+        diagonal under replicated), and each miss adds ``fanout`` edges to
+        ``host_sampled_edges`` — the host-side sampling work the sharded
+        cache exists to eliminate."""
         srcs = np.asarray(srcs, dtype=np.int64)
         srcs = srcs[srcs >= 0]
         pos = self.topo_pos[srcs]
@@ -592,11 +768,23 @@ class CliqueCache:
             deg = self.g.indptr[miss + 1] - self.g.indptr[miss]
             tx = int((np.ceil(deg * S_UINT32 / CLS).astype(np.int64) + 1).sum())
             n_bytes = int((deg * S_UINT32).sum())
+        hb = fanout * S_UINT32
         with counter.lock:
             counter.topo_requests += len(srcs)
             counter.topo_hits += int(hit.sum())
             counter.pcie_transactions += tx
             counter.bytes_matrix[requester_dev, -1] += n_bytes
+            counter.host_sampled_edges += fanout * len(miss)
+            counter.topo_bytes_matrix[requester_dev, -1] += n_bytes
+            if hit.any():
+                if self.topology_mode == "sharded":
+                    owners = self.topo_owner[srcs[hit]]
+                    cnt = np.bincount(owners, minlength=len(self.devices))
+                    np.add.at(counter.topo_bytes_matrix[requester_dev],
+                              np.asarray(self.devices), hb * cnt)
+                else:
+                    counter.topo_bytes_matrix[
+                        requester_dev, requester_dev] += hb * int(hit.sum())
 
 
 def stack_hierarchical_shards(caches: Sequence[CliqueCache],
@@ -632,19 +820,43 @@ def stack_hierarchical_shards(caches: Sequence[CliqueCache],
 
 
 def plan_cache_contents(g: CSRGraph, k_g: int, cslp_res, cost_plan: dict,
-                        mem_per_device: float):
+                        mem_per_device: float, topology_mode: str = "sharded"):
     """Fill per-device queues until the planned per-device budgets (§4.2 S3).
     Returns (feat_ids_per_dev, topo_ids_per_dev) — the *target* residency
-    sets, shared by initial cache construction and online delta refreshes."""
+    sets, shared by initial cache construction and online delta refreshes.
+
+    ``topology_mode`` controls how the per-device topology byte budget
+    ``bt`` is spent.  Under ``"sharded"`` each device fills its own CSLP
+    queue ``G_T[gi]`` to ``bt`` (the per-device lists are disjoint, so the
+    clique's *union* caches ~k_g x bt of topology — the capacity win the
+    routed neighbor exchange pays for with intra-clique hops).  Under
+    ``"replicated"`` every device must hold the same union, so the union
+    itself is capped at ``bt``: the globally hottest vertices (``Q_T``
+    order) up to ``bt`` bytes, split back into per-device lists by CSLP
+    ownership purely for bookkeeping.  This is the equal-memory baseline
+    the topology_scaling benchmark compares against."""
     alpha = cost_plan["m_T"] / max(cost_plan["m_T"] + cost_plan["m_F"], 1)
+    if topology_mode not in CliqueCache.TOPOLOGY_MODES:
+        raise ValueError(f"unknown topology_mode {topology_mode!r}; "
+                         f"expected one of {CliqueCache.TOPOLOGY_MODES}")
+    bt = mem_per_device * alpha
+    bf = mem_per_device * (1 - alpha)
+    keep = None
+    if topology_mode == "replicated":
+        q = np.asarray(cslp_res.Q_T)
+        b = np.cumsum(g.topology_bytes(q)) if len(q) else np.zeros(0)
+        keep = np.zeros(g.n, dtype=bool)
+        keep[q[: int(np.searchsorted(b, bt, side="right"))]] = True
     feat_ids, topo_ids = [], []
     for gi in range(k_g):
-        bt = mem_per_device * alpha
-        bf = mem_per_device * (1 - alpha)
-        # topology: fill G_T[gi] until bt bytes
-        q = cslp_res.G_T[gi]
-        b = np.cumsum(g.topology_bytes(q)) if len(q) else np.zeros(0)
-        topo_ids.append(q[: int(np.searchsorted(b, bt, side="right"))])
+        # topology: fill G_T[gi] until bt bytes (sharded), or take this
+        # device's slice of the bt-byte union (replicated)
+        q = np.asarray(cslp_res.G_T[gi])
+        if keep is not None:
+            topo_ids.append(q[keep[q]] if len(q) else q)
+        else:
+            b = np.cumsum(g.topology_bytes(q)) if len(q) else np.zeros(0)
+            topo_ids.append(q[: int(np.searchsorted(b, bt, side="right"))])
         # features: fixed row size
         q = cslp_res.G_F[gi]
         nrows = int(bf // g.feature_bytes_per_vertex())
@@ -653,7 +865,10 @@ def plan_cache_contents(g: CSRGraph, k_g: int, cslp_res, cost_plan: dict,
 
 
 def build_clique_cache(g: CSRGraph, devices, cslp_res, cost_plan: dict,
-                       mem_per_device: float, materialize: bool = True) -> CliqueCache:
+                       mem_per_device: float, materialize: bool = True,
+                       topology_mode: str = "sharded") -> CliqueCache:
     feat_ids, topo_ids = plan_cache_contents(g, len(devices), cslp_res,
-                                             cost_plan, mem_per_device)
-    return CliqueCache(g, devices, feat_ids, topo_ids, materialize=materialize)
+                                             cost_plan, mem_per_device,
+                                             topology_mode=topology_mode)
+    return CliqueCache(g, devices, feat_ids, topo_ids, materialize=materialize,
+                       topology_mode=topology_mode)

@@ -111,72 +111,152 @@ def cache_sample_level(g: CSRGraph, cache, seeds: np.ndarray, fanout: int,
     return out, hit
 
 
+def _mirror_sample_level(cache, seeds: np.ndarray, fanout: int,
+                         rand: np.ndarray) -> np.ndarray:
+    """Replay one level's draws against the *host mirror* of the topology
+    cache (the union CSR ``topo_pos``/``cache_indptr``/``cache_indices``).
+    Every cached vertex's adjacency is stored in host order, so for cached
+    non-negative ``seeds`` this is bit-identical to ``host_sample_level``
+    — without touching the host CSR (it is the stale-parent repair path of
+    the chained sampler, not a host fallback)."""
+    seeds = np.asarray(seeds, dtype=np.int64)
+    pos = cache.topo_pos[seeds]
+    start = cache.cache_indptr[pos]
+    deg = cache.cache_indptr[pos + 1] - start
+    offs = rand % np.maximum(deg, 1)[:, None]
+    idx = np.minimum(start[:, None] + offs,
+                     max(len(cache.cache_indices) - 1, 0))
+    out = cache.cache_indices[idx].astype(np.int64)
+    return np.where((deg > 0)[:, None], out, -1)
+
+
+def cache_sample_dispatch(g: CSRGraph, cache, seeds: np.ndarray,
+                          fanouts: Sequence[int], rng: np.random.Generator):
+    """Phase 1 of the chained cache-aware sampler: draw every hop's
+    randomness in host-sampler order and enqueue the whole device chain
+    (``CliqueCache.device_sample_chain`` — the routed neighbor exchange
+    under the sharded layout) *without reading anything back*.
+
+    Returns a ``resolve(counter=None)`` closure that pays the single host
+    sync and finishes the batch; the builder can run unrelated host work
+    (label fetch, accounting) between dispatch and resolve so the chain's
+    device time overlaps it.  The resolve pass repairs rows the device
+    could not serve, cheapest source first:
+
+    * negative sources (deg-0 parents / padding) are ``-1`` rows by
+      definition — no CSR of any kind is consulted;
+    * cached sources whose *parent* was host-filled (the device saw ``-1``
+      where the host later wrote a cached id) replay their draws against
+      the cache's host mirror — a topology *hit*, repaired off-device only
+      because the value arrived after the chain was enqueued;
+    * only genuinely uncached sources fall back to the host CSR, batched
+      into one vectorized ``host_sample_level`` call per hop.
+
+    All three replay the exact draws the device half consumed, so the
+    composed levels stay bit-identical to ``host_sample_batch``; the hit
+    masks match the per-hop reference path exactly.  ``counter`` (a
+    ``TrafficCounter``) gets ``host_sample_syncs += 1`` iff the batch
+    touched the host CSR at all — a warm epoch whose frontier fits the
+    cached topology resolves with zero host sampling syncs.
+    """
+    seeds = np.asarray(seeds, dtype=np.int64)
+    rands = []
+    n_flat = len(seeds)
+    for f in fanouts:
+        rands.append(rng.integers(0, 1 << 31, size=(n_flat, f)))
+        n_flat *= f
+    dev_outs, dev_hits = cache.device_sample_chain(seeds, fanouts, rands)
+
+    def resolve(counter=None):
+        levels = [seeds]
+        hits: List[np.ndarray] = []
+        frontier = seeds
+        shape = (len(frontier),)
+        # one sync for the whole chain
+        outs = [np.asarray(o) for o in dev_outs]
+        dhits = [np.asarray(h) for h in dev_hits]
+        mirror_ok = cache.cache_indices is not None
+        ok = np.ones(len(frontier), dtype=bool)
+        touched_host = False
+        for k, f in enumerate(fanouts):
+            flat = frontier.reshape(-1)
+            resolved = dhits[k] & ok
+            out = outs[k].astype(np.int64)
+            need = np.flatnonzero(~resolved)
+            if len(need):
+                src = flat[need]
+                neg = src < 0
+                out[need[neg]] = -1
+                live = need[~neg]
+                if len(live):
+                    cached = (cache.topo_pos[flat[live]] >= 0) if mirror_ok \
+                        else np.zeros(len(live), dtype=bool)
+                    fix = live[cached]
+                    if len(fix):
+                        out[fix] = _mirror_sample_level(cache, flat[fix], f,
+                                                        rands[k][fix])
+                        resolved[fix] = True
+                    host = live[~cached]
+                    if len(host):
+                        touched_host = True
+                        out[host] = host_sample_level(g, flat[host], f, rng,
+                                                      rand=rands[k][host])
+            hits.append(resolved)
+            shape = shape + (f,)
+            levels.append(out.reshape(shape))
+            frontier = levels[-1]
+            ok = np.repeat(resolved, f)
+        if counter is not None and touched_host:
+            with counter.lock:
+                counter.host_sample_syncs += 1
+        return levels, hits
+
+    return resolve
+
+
 def cache_sample_batch(g: CSRGraph, cache, seeds: np.ndarray,
                        fanouts: Sequence[int], rng: np.random.Generator,
-                       chain: bool = True
+                       chain: bool = True, counter=None
                        ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
     """Cache-aware multi-hop sample (device backend of the batch pipeline).
 
-    Same contract as ``host_sample_batch`` plus per-level device-hit masks
-    (flattened frontier order).  With an identically-seeded ``rng`` the
-    returned levels are bit-identical to the host sampler's.
+    Same contract as ``host_sample_batch`` plus per-level topology-hit
+    masks (flattened frontier order).  With an identically-seeded ``rng``
+    the returned levels are bit-identical to the host sampler's.
 
     ``chain=True`` (default) enqueues all hops' device halves back-to-back
-    (``CliqueCache.device_sample_chain``) and pays a *single* host sync per
-    batch; the host fallback then resolves hop by hop at the end.  A row is
-    device-resolved only if its topology was cached *and* its parent row
-    was itself device-resolved (a host-filled parent is a ``-1`` on
-    device); everything else replays the same random draws against the
-    host CSR, so the composed levels are bit-identical either way — only
-    the hit masks tighten (chained misses fall back to the host).
-    Per-level traffic accounting reads ``topo_pos`` directly
-    (``CliqueCache.sample_accounting``) and is unaffected by the masks.
+    and pays a *single* host sync per batch — see
+    ``cache_sample_dispatch`` for the resolve contract (stale-parent rows
+    repair from the cache's host mirror, so the hit masks match the
+    per-hop path exactly and only genuinely uncached rows touch the host
+    CSR).
 
     ``chain=False`` is the legacy per-hop path (one device sync per hop via
     ``cache_sample_level``) — kept as the reference for parity tests and
     the ``pipeline_stall`` before/after benchmark.
+
+    ``counter`` (a ``TrafficCounter``) tallies ``host_sample_syncs`` — one
+    per batch whose resolution touched the host CSR, either path.
     """
+    if chain:
+        return cache_sample_dispatch(g, cache, seeds, fanouts, rng)(
+            counter=counter)
     levels = [np.asarray(seeds, dtype=np.int64)]
     hits: List[np.ndarray] = []
     frontier = levels[0]
     shape = (len(frontier),)
-    if not chain:
-        for f in fanouts:
-            nxt, hit = cache_sample_level(g, cache, frontier.reshape(-1), f,
-                                          rng)
-            hits.append(hit)
-            shape = shape + (f,)
-            levels.append(nxt.reshape(shape))
-            frontier = levels[-1]
-        return levels, hits
-    # phase 1 — draw each hop's randomness in host-sampler order and
-    # enqueue every device half without reading anything back
-    rands = []
-    n_flat = len(frontier)
+    touched_host = False
     for f in fanouts:
-        rands.append(rng.integers(0, 1 << 31, size=(n_flat, f)))
-        n_flat *= f
-    dev_outs, dev_hits = cache.device_sample_chain(levels[0], fanouts, rands)
-    # phase 2 — one sync for the whole chain...
-    dev_outs = [np.asarray(o) for o in dev_outs]
-    dev_hits = [np.asarray(h) for h in dev_hits]
-    # ...then resolve hop by hop: rows the device could not serve (topo
-    # miss, negative seed, or stale parent) re-sample from the host CSR
-    # with the very draws the device half consumed
-    ok = np.ones(len(frontier), dtype=bool)  # frontier rows true on device
-    for k, f in enumerate(fanouts):
         flat = frontier.reshape(-1)
-        resolved = dev_hits[k] & ok
-        out = dev_outs[k].astype(np.int64)
-        need = ~resolved
-        if need.any():
-            out[need] = host_sample_level(g, flat[need], f, rng,
-                                          rand=rands[k][need])
-        hits.append(resolved)
+        nxt, hit = cache_sample_level(g, cache, flat, f, rng)
+        touched_host |= bool((~hit & (flat >= 0)).any())
+        hits.append(hit)
         shape = shape + (f,)
-        levels.append(out.reshape(shape))
+        levels.append(nxt.reshape(shape))
         frontier = levels[-1]
-        ok = np.repeat(resolved, f)
+    if counter is not None and touched_host:
+        with counter.lock:
+            counter.host_sample_syncs += 1
     return levels, hits
 
 

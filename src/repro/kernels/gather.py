@@ -114,3 +114,59 @@ def routed_gather(shard: jax.Array, owner: jax.Array, local_slot: jax.Array,
     rows = rows.reshape(k, n, shard.shape[1])
     rows = jax.lax.psum(rows, axis_name)
     return rows[me]
+
+
+def routed_neighbor_sample(indptr: jax.Array, indices: jax.Array,
+                           owner: jax.Array, local: jax.Array,
+                           rand: jax.Array, axis_name: str, *,
+                           impl: str = "auto",
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Routed neighbor exchange — ``routed_gather`` generalized from fixed-
+    width feature rows to ragged-CSR neighbor sampling.  Call *inside*
+    ``shard_map`` over ``axis_name`` (the clique mesh axis).
+
+    Each device holds one topology shard — ``indptr`` (R+1,) int, padded
+    rows repeating the last offset (degree 0), and ``indices`` (E,) int32,
+    its vertices' adjacency in host order — plus one batch's frontier
+    routing ``owner``/``local`` (n,) (``CliqueCache`` topo routing tables;
+    ``owner < 0`` marks a topology miss) and the host random draws ``rand``
+    (n, f) int32, the exact per-hop draws of the host sampler.
+
+    Every device all-gathers the clique's frontier, samples the rows *it*
+    owns from its local shard CSR (``start + rand % deg`` — bit-identical
+    to ``host_sample_level`` because each shard keeps host adjacency
+    order; the gather runs the Pallas kernel on TPU), and one ``psum``
+    delivers each row's neighbors back to its requester.  The -1 miss
+    sentinel (unowned rows and deg-0 vertices) survives the sum via a +1
+    shift: owners contribute ``out + 1``, non-owners 0, so after the psum
+    ownerless rows decode to exactly -1.  Returns (n, f) int32: this
+    device's sampled neighbors, -1 rows left for the deferred host fill.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown routed_neighbor_sample impl {impl!r}")
+    me = jax.lax.axis_index(axis_name)
+    owner_all = jax.lax.all_gather(owner, axis_name)    # (k, n)
+    local_all = jax.lax.all_gather(local, axis_name)    # (k, n)
+    rand_all = jax.lax.all_gather(rand, axis_name)      # (k, n, f)
+    k, n = owner_all.shape
+    mine = owner_all == me
+    safe_l = jnp.where(mine, local_all, 0)
+    start = indptr[safe_l]
+    deg = indptr[safe_l + 1] - start
+    offs = rand_all % jnp.maximum(deg, 1)[..., None]
+    E = indices.shape[0]
+    idx = jnp.minimum(start[..., None] + offs, jnp.maximum(E - 1, 0))
+    if impl == "pallas":
+        out = gather_rows_pallas(indices[:, None], idx.reshape(-1),
+                                 interpret=interpret)
+        out = out.reshape(idx.shape).astype(jnp.int32)
+    else:
+        out = indices[idx].astype(jnp.int32)
+    # +1 shift: only the owner contributes its (shifted) samples; deg-0
+    # vertices contribute 0 like non-owners, so they decode to -1 too
+    serve = (mine & (deg > 0))[..., None]
+    contrib = jnp.where(serve, out + 1, 0)
+    total = jax.lax.psum(contrib, axis_name)
+    return (total - 1)[me]

@@ -50,6 +50,29 @@ def routed_gather_dense(shards: jax.Array, owner: jax.Array,
     return jnp.where((owner >= 0)[..., None], out, 0).astype(shards.dtype)
 
 
+def routed_neighbor_sample_dense(indptr_shards: jax.Array,
+                                 indices_shards: jax.Array,
+                                 owner: jax.Array, local: jax.Array,
+                                 rand: jax.Array) -> jax.Array:
+    """Single-device oracle for ``gather.routed_neighbor_sample``: given the
+    full sharded-CSR stacks — ``indptr_shards`` (k, R+1), ``indices_shards``
+    (k, E) — per-requester routing (k, n) and host random draws (k, n, f),
+    returns (k, n, f) int32 neighbor ids with
+    ``out[g, i, j] = indices[owner[g,i], start + rand[g,i,j] % deg]``
+    (-1 where owner < 0 — topology miss — or deg == 0, matching
+    ``host_sample_level``'s sentinel for isolated vertices)."""
+    safe_o = jnp.maximum(owner, 0)
+    safe_l = jnp.maximum(local, 0)
+    start = indptr_shards[safe_o, safe_l]
+    deg = indptr_shards[safe_o, safe_l + 1] - start
+    offs = rand % jnp.maximum(deg, 1)[..., None]
+    E = indices_shards.shape[1]
+    idx = jnp.minimum(start[..., None] + offs, E - 1)
+    out = indices_shards[safe_o[..., None], idx].astype(jnp.int32)
+    ok = (owner >= 0) & (deg > 0)
+    return jnp.where(ok[..., None], out, -1)
+
+
 def sage_aggregate(table: jax.Array, idx: jax.Array, weights: jax.Array):
     """Fused gather + weighted sum: out[b] = sum_f w[b,f] * table[idx[b,f]].
 

@@ -137,7 +137,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_path=None,
 
     t0 = time.time()
     cell = build_cell(cfg, shape, mesh)
-    donate = (0,) if cell.meta["kind"] == "train" else ((1,) if cell.meta["kind"] == "decode" else ())
+    donate = ((0,) if cell.meta["kind"] == "train"
+              else ((1,) if cell.meta["kind"] == "decode" else ()))
     jfn = jax.jit(cell.fn, out_shardings=cell.out_shardings,
                   donate_argnums=donate)
     with jax.set_mesh(mesh):

@@ -174,8 +174,10 @@ def decode_self_attention(
     q = layers.rope(q, positions, theta)
     k_new = layers.rope(k_new, positions, theta)
 
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
     k = dist.constrain(k, "batch", "kv_seq", None, None)
     v = dist.constrain(v, "batch", "kv_seq", None, None)
 

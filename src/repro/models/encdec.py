@@ -123,10 +123,14 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, dist: Distribution):
 def cache_defs(cfg: ModelConfig, batch: int, enc_len: int, max_tgt: int) -> dict:
     Ld, Hkv, Dh = cfg.n_dec_layers, cfg.n_kv_heads, cfg.resolved_head_dim
     return {
-        "self_k": Def((Ld, batch, max_tgt, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
-        "self_v": Def((Ld, batch, max_tgt, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
-        "cross_k": Def((Ld, batch, enc_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
-        "cross_v": Def((Ld, batch, enc_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "self_k": Def((Ld, batch, max_tgt, Hkv, Dh),
+                      ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "self_v": Def((Ld, batch, max_tgt, Hkv, Dh),
+                      ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "cross_k": Def((Ld, batch, enc_len, Hkv, Dh),
+                       ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "cross_v": Def((Ld, batch, enc_len, Hkv, Dh),
+                       ("layers", "batch", "kv_seq", None, None), init="zeros"),
     }
 
 

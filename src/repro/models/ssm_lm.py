@@ -214,7 +214,8 @@ def state_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     din, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
     d = {
         "h": Def((L, batch, H, N, P_), ("layers", "batch", "ssm_heads", None, None), init="zeros"),
-        "conv_x": Def((L, batch, W - 1, din), ("layers", "batch", None, "ssm_inner"), init="zeros"),
+        "conv_x": Def((L, batch, W - 1, din),
+                      ("layers", "batch", None, "ssm_inner"), init="zeros"),
         "conv_B": Def((L, batch, W - 1, gn), ("layers", "batch", None, None), init="zeros"),
         "conv_C": Def((L, batch, W - 1, gn), ("layers", "batch", None, None), init="zeros"),
     }

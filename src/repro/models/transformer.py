@@ -212,8 +212,10 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, dist: Distribution):
 def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
     return {
-        "k": Def((L, batch, max_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
-        "v": Def((L, batch, max_len, Hkv, Dh), ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "k": Def((L, batch, max_len, Hkv, Dh),
+                 ("layers", "batch", "kv_seq", None, None), init="zeros"),
+        "v": Def((L, batch, max_len, Hkv, Dh),
+                 ("layers", "batch", "kv_seq", None, None), init="zeros"),
     }
 
 

@@ -66,8 +66,8 @@ import numpy as np
 
 from repro.core.unified_cache import CliqueCache, TrafficCounter
 from repro.graph.csr import CSRGraph
-from repro.graph.sampling import (cache_sample_batch, host_sample_batch,
-                                  unique_vertices)
+from repro.graph.sampling import (cache_sample_batch, cache_sample_dispatch,
+                                  host_sample_batch, unique_vertices)
 
 BACKENDS = ("host", "device", "sharded")
 
@@ -243,6 +243,10 @@ class HostBatchBuilder(BatchBuilder):
 
     def build_spec(self, seeds, rng):
         levels = host_sample_batch(self.g, seeds, self.fanouts, rng)
+        if self.counter is not None:
+            # every host build samples from the host CSR by construction
+            with self.counter.lock:
+                self.counter.host_sample_syncs += 1
         self._account_sampling(levels)
         ids = unique_vertices(levels)
         feats = (self.cache.extract_features(ids, self.dev, self.counter)
@@ -320,9 +324,19 @@ class DeviceBatchBuilder(BatchBuilder):
         return CliqueCache._lane_padded(self.g.feat_dim)
 
     def build_spec(self, seeds, rng):
-        levels, _topo_hits = cache_sample_batch(
-            self.g, self.cache, seeds, self.fanouts, rng,
-            chain=(self.sampler == "chain"))
+        if self.sampler == "chain":
+            # dispatch the whole device chain, then fetch labels while it
+            # is in flight; resolve() pays the single sync and repairs
+            # stale-parent / host-miss rows (see cache_sample_dispatch)
+            resolve = cache_sample_dispatch(self.g, self.cache, seeds,
+                                            self.fanouts, rng)
+            labels = self.g.get_labels(seeds)
+            levels, _topo_hits = resolve(counter=self.counter)
+        else:
+            levels, _topo_hits = cache_sample_batch(
+                self.g, self.cache, seeds, self.fanouts, rng, chain=False,
+                counter=self.counter)
+            labels = self.g.get_labels(seeds)
         self._account_sampling(levels)
         ids = unique_vertices(levels)
         cache_pos, hit = self.cache.split_hits(ids)
@@ -348,7 +362,7 @@ class DeviceBatchBuilder(BatchBuilder):
         if n_miss:
             staging[:n_miss, :D] = self.g.get_features(ids[~hit])
         staging[n_miss:, :D] = 0.0
-        return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
+        return BatchSpec(labels=labels, levels=levels,
                          ids=ids_p, level_pos=level_pos,
                          cache_pos=pos_p, hit=hit_p, miss_feats=staging,
                          miss_inv=miss_inv, n_ids=n_ids, n_miss=n_miss,

@@ -134,6 +134,9 @@ class GNNTrainResult:
     backend: str = "host"
     pipeline: dict = dataclasses.field(default_factory=dict)
     refresh: dict = dataclasses.field(default_factory=dict)
+    # sampling-path traffic digest (from the shared TrafficCounter): how
+    # much neighbor sampling ran on device vs fell back to the host CSR
+    sampling: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -378,6 +381,14 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             builders[d].release_spec(s)
         return packed
 
+    def sampling_summary():
+        """Sampling-path digest off the shared counter: the sharded
+        topology cache's whole point is driving ``host_sample_syncs`` and
+        ``host_sampled_edges`` to zero on warm epochs."""
+        return {"host_sample_syncs": counter.host_sample_syncs,
+                "host_sampled_edges": counter.host_sampled_edges,
+                "topo_hit_rate": counter.topo_hit_rate}
+
     prefetcher = Prefetcher(part_fns=[make_spec_fn(d) for d in devices],
                             part_group_sizes=(
                                 [len(c) for c in exec_cliques]
@@ -387,7 +398,8 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                             pre_batch_hook=(manager.on_step
                                             if manager is not None else None),
                             pack_fn=(pack_fn if backend == "sharded"
-                                     else None))
+                                     else None),
+                            extra_summary=sampling_summary)
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
@@ -437,4 +449,5 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                           steps=steps - step0, backend=backend,
                           pipeline=prefetcher.summary(),
                           refresh=(manager.summary()
-                                   if manager is not None else {}))
+                                   if manager is not None else {}),
+                          sampling=sampling_summary())

@@ -49,7 +49,8 @@ class Prefetcher:
                  pack_fn: Optional[Callable[[dict], dict]] = None, *,
                  part_fns: Optional[List[Callable[[int], object]]] = None,
                  part_group_sizes: Optional[List[int]] = None,
-                 workers: Optional[int] = None):
+                 workers: Optional[int] = None,
+                 extra_summary: Optional[Callable[[], dict]] = None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
@@ -83,7 +84,12 @@ class Prefetcher:
         built batch on the coordinator thread (timed separately in
         ``summary()``): the sharded executor packs per-clique specs into
         mesh-sharded arrays here, so the consumer thread dequeues batches
-        that are already in device-shardable layout."""
+        that are already in device-shardable layout.
+
+        ``extra_summary`` is an optional zero-arg callable merged into
+        ``summary()`` at read time — the train loop uses it to surface
+        builder-side stats (deferred host-fallback timing) next to the
+        queue stats without the Prefetcher knowing about builders."""
         if (batch_fn is None) == (part_fns is None):
             raise ValueError("pass exactly one of batch_fn / part_fns")
         self._batch_fn = batch_fn
@@ -114,6 +120,7 @@ class Prefetcher:
         self._limit = limit
         self._hook = pre_batch_hook
         self._pack_fn = pack_fn
+        self._extra_summary = extra_summary
         self._build_s = 0.0
         self._pack_s = 0.0
         self._built = 0
@@ -202,14 +209,17 @@ class Prefetcher:
         ``queue_dry_s_*`` is time ``get()`` spent waiting for the queue —
         with a deep-enough queue and a fast-enough host phase it stays near
         zero, and any growth is directly attributable device idle time."""
-        return {"batches_built": self._built,
-                "host_build_s_total": self._build_s,
-                "host_build_s_mean": self._build_s / max(self._built, 1),
-                "host_pack_s_total": self._pack_s,
-                "host_pack_s_mean": self._pack_s / max(self._built, 1),
-                "queue_dry_s_total": self._dry_s,
-                "queue_dry_s_mean": self._dry_s / max(self._gets, 1),
-                "build_workers": self._workers}
+        out = {"batches_built": self._built,
+               "host_build_s_total": self._build_s,
+               "host_build_s_mean": self._build_s / max(self._built, 1),
+               "host_pack_s_total": self._pack_s,
+               "host_pack_s_mean": self._pack_s / max(self._built, 1),
+               "queue_dry_s_total": self._dry_s,
+               "queue_dry_s_mean": self._dry_s / max(self._gets, 1),
+               "build_workers": self._workers}
+        if self._extra_summary is not None:
+            out.update(self._extra_summary())
+        return out
 
     def close(self):
         """Stop the worker.  A worker exception that was never surfaced via

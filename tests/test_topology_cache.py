@@ -1,0 +1,232 @@
+"""Sharded topology cache: mode parity (sharded == replicated == host
+sampler, bit-for-bit), routed topology accounting, the stale-parent repair,
+zero-sync warm epochs, the planner's per-mode budget split, and
+``replace_topology`` under the sharded layout."""
+import numpy as np
+import pytest
+
+from repro.core.cliques import topology_matrix
+from repro.core.planner import build_plan, replan_on_topology_change
+from repro.core.unified_cache import CliqueCache, TrafficCounter
+from repro.graph.csr import powerlaw_graph
+from repro.graph import sampling
+from repro.graph.sampling import cache_sample_batch, host_sample_batch
+from repro.train.batch import DeviceBatchBuilder, HostBatchBuilder
+
+K = 4
+FANOUTS = (5, 3)
+
+
+def _graph(n=3000):
+    return powerlaw_graph(n, 8, seed=9, feat_dim=16)
+
+
+def _cache(g, mode, coverage=0.5):
+    """CliqueCache over K devices caching the hottest-by-degree
+    ``coverage`` fraction of vertices, split contiguously per device.
+    Both modes get the *same* per-device id lists, so they cache the same
+    union — the hit split must be identical, only residency layout and
+    exchange routing differ."""
+    order = np.argsort(-(g.indptr[1:] - g.indptr[:-1]), kind="stable")
+    ids = np.sort(order[: int(g.n * coverage)]).astype(np.int64)
+    parts = np.array_split(ids, K)
+    feat = [p[:8] for p in parts]
+    return CliqueCache(g, list(range(K)), feat, parts, topology_mode=mode)
+
+
+def test_topology_mode_validation():
+    g = _graph(500)
+    with pytest.raises(ValueError):
+        _cache(g, "mirrored")
+
+
+@pytest.mark.parametrize("mode", CliqueCache.TOPOLOGY_MODES)
+def test_mode_parity_with_host_sampler(mode):
+    """Composed levels bit-identical to host_sample_batch in both modes,
+    chain and stepwise, and the hit masks agree between the two paths
+    (the stale-parent repair pin: chained masks are no longer tighter)."""
+    g = _graph()
+    cache = _cache(g, mode)
+    for seed in (0, 3):
+        seeds = np.random.default_rng(seed + 50).integers(0, g.n, 64)
+        rngs = [np.random.default_rng(seed) for _ in range(3)]
+        ref = host_sample_batch(g, seeds, FANOUTS, rngs[0])
+        lv_c, hits_c = cache_sample_batch(g, cache, seeds, FANOUTS, rngs[1],
+                                          chain=True)
+        lv_s, hits_s = cache_sample_batch(g, cache, seeds, FANOUTS, rngs[2],
+                                          chain=False)
+        for a, b, c in zip(ref, lv_c, lv_s):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, c)
+        for hc, hs in zip(hits_c, hits_s):
+            np.testing.assert_array_equal(hc, hs)
+
+
+def test_sharded_matches_replicated_bitwise():
+    """The two layouts are interchangeable: identical levels, identical
+    hit masks, identical legacy traffic counters."""
+    g = _graph()
+    caches = {m: _cache(g, m) for m in CliqueCache.TOPOLOGY_MODES}
+    seeds = np.random.default_rng(7).integers(0, g.n, 64)
+    out = {}
+    for m, cache in caches.items():
+        rng = np.random.default_rng(1)
+        ctr = TrafficCounter.for_devices(range(K))
+        lv, hits = cache_sample_batch(g, cache, seeds, FANOUTS, rng,
+                                      counter=ctr)
+        for lvl, f in zip(lv[:-1], FANOUTS):
+            cache.sample_accounting(lvl.reshape(-1), f, ctr, 0)
+        out[m] = (lv, hits, ctr)
+    (lv_a, hits_a, ca), (lv_b, hits_b, cb) = out.values()
+    for a, b in zip(lv_a, lv_b):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(hits_a, hits_b):
+        np.testing.assert_array_equal(a, b)
+    assert (ca.topo_requests, ca.topo_hits, ca.pcie_transactions,
+            ca.host_sample_syncs, ca.host_sampled_edges) == \
+           (cb.topo_requests, cb.topo_hits, cb.pcie_transactions,
+            cb.host_sample_syncs, cb.host_sampled_edges)
+    np.testing.assert_array_equal(ca.bytes_matrix, cb.bytes_matrix)
+
+
+def test_topology_traffic_accounting_routes_to_owner():
+    """topo_bytes_matrix: per-row totals agree across modes (same hits,
+    same per-hit payload), but sharded scatters hit bytes to the owner
+    shard's column while replicated keeps them on the requester's
+    diagonal; host-fill bytes land in the PCIe column identically."""
+    g = _graph()
+    ctrs = {}
+    for m in CliqueCache.TOPOLOGY_MODES:
+        cache = _cache(g, m)
+        ctr = TrafficCounter.for_devices(range(K))
+        srcs = np.random.default_rng(2).integers(0, g.n, 512)
+        cache.sample_accounting(srcs, 5, ctr, requester_dev=1)
+        assert ctr.topo_requests == 512
+        assert 0 < ctr.topo_hits < 512
+        assert ctr.host_sampled_edges == 5 * (512 - ctr.topo_hits)
+        # hit payload: fanout sampled ids (uint32) per hit row
+        assert ctr.topo_bytes_matrix[1, :-1].sum() == 4 * 5 * ctr.topo_hits
+        assert ctr.topo_bytes_matrix[1, -1] == ctr.bytes_matrix[1, -1]
+        ctrs[m] = ctr
+    sh, rep = ctrs["sharded"], ctrs["replicated"]
+    np.testing.assert_array_equal(sh.topo_bytes_matrix.sum(axis=1),
+                                  rep.topo_bytes_matrix.sum(axis=1))
+    # replicated: every hit is local; sharded: most rows live on peers
+    assert rep.topo_bytes_matrix[1, :-1].sum() == rep.topo_bytes_matrix[1, 1]
+    off = sh.topo_bytes_matrix[1, :-1].sum() - sh.topo_bytes_matrix[1, 1]
+    assert off > 0
+    assert sh.topo_hit_rate == rep.topo_hit_rate
+    merged = TrafficCounter.for_devices(range(K))
+    merged.merge(sh)
+    np.testing.assert_array_equal(merged.topo_bytes_matrix,
+                                  sh.topo_bytes_matrix)
+
+
+def test_stale_parent_rows_resolve_from_cache_mirror(monkeypatch):
+    """Satellite bugfix pin: a cached child of a host-filled parent repairs
+    from the cache mirror, never the host CSR — the host CSR sees exactly
+    the rows sample_accounting charges as misses (counterfactual ==
+    actual), and fewer rows than before the fix."""
+    g = _graph()
+    cache = _cache(g, "sharded", coverage=0.5)
+    counted = {"rows": 0}
+    real = sampling.host_sample_level
+
+    def spy(g_, seeds, fanout, rng, rand=None):
+        counted["rows"] += len(seeds) * fanout
+        assert (np.asarray(seeds) >= 0).all(), \
+            "negative sources must shortcut to -1, not reach the host CSR"
+        assert (cache.topo_pos[np.asarray(seeds)] < 0).all(), \
+            "cached sources must repair from the cache mirror"
+        return real(g_, seeds, fanout, rng, rand=rand)
+
+    monkeypatch.setattr(sampling, "host_sample_level", spy)
+    ctr = TrafficCounter.for_devices(range(K))
+    builder = DeviceBatchBuilder(g, cache, FANOUTS, counter=ctr, dev=0,
+                                 gather="xla")
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        seeds = rng.integers(0, g.n, 64)
+        builder.build_spec(seeds, rng)
+    assert counted["rows"] > 0
+    assert ctr.host_sampled_edges == counted["rows"]
+    assert ctr.host_sample_syncs == 3
+
+
+def test_warm_covered_epoch_has_zero_host_syncs(monkeypatch):
+    """Full topology coverage => the whole epoch samples device-side:
+    0 host sampling syncs, 0 host-sampled edges, and the host CSR sampler
+    is never invoked at all."""
+    g = _graph(1500)
+    cache = _cache(g, "sharded", coverage=1.0)
+
+    def boom(*a, **kw):
+        raise AssertionError("host CSR sampled during a covered epoch")
+
+    monkeypatch.setattr(sampling, "host_sample_level", boom)
+    ctr = TrafficCounter.for_devices(range(K))
+    builder = DeviceBatchBuilder(g, cache, FANOUTS, counter=ctr, dev=0,
+                                 gather="xla")
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        builder.build_spec(rng.integers(0, g.n, 64), rng)
+    assert ctr.host_sample_syncs == 0
+    assert ctr.host_sampled_edges == 0
+    assert ctr.topo_hits == ctr.topo_requests > 0
+    monkeypatch.undo()
+    # the host backend on the same workload syncs every build
+    ctr_h = TrafficCounter.for_devices(range(K))
+    hb = HostBatchBuilder(g, cache, FANOUTS, counter=ctr_h, dev=0)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        hb.build_spec(rng.integers(0, g.n, 64), rng)
+    assert ctr_h.host_sample_syncs == 4
+
+
+def test_planner_topology_budget_split():
+    """Sharded mode fills each device's disjoint queue to the bt budget
+    (union ~= K x bt); replicated caps the *union* at bt — so at equal
+    per-device memory the sharded union caches strictly more topology."""
+    g = _graph()
+    mem = 120_000
+    plans = {m: build_plan(g, topology_matrix("nv8", K), mem_per_device=mem,
+                           batch_size=256, seed=0, topology_mode=m)
+             for m in CliqueCache.TOPOLOGY_MODES}
+    sh, rep = plans["sharded"].caches[0], plans["replicated"].caches[0]
+    assert plans["sharded"].topology_mode == "sharded"
+    assert plans["replicated"].topology_mode == "replicated"
+    cp = plans["replicated"].cost_plans[0]
+    bt = mem * cp["m_T"] / max(cp["m_T"] + cp["m_F"], 1)
+    # replicated: the union itself fits the per-device budget
+    assert rep.topo_bytes <= bt
+    assert all(b == rep.topo_bytes for b in rep.topo_bytes_by_device())
+    # sharded: every device stays within bt but the union exceeds it
+    assert all(b <= bt for b in sh.topo_bytes_by_device())
+    assert sh.topo_bytes > rep.topo_bytes
+    assert len(sh.topo_ids) > len(rep.topo_ids)
+    # elastic replan preserves the mode
+    re = replan_on_topology_change(g, plans["replicated"],
+                                   topology_matrix("nv8", K))
+    assert re.topology_mode == "replicated"
+    assert re.caches[0].topology_mode == "replicated"
+
+
+def test_replace_topology_sharded_consistency():
+    """replace_topology under the sharded layout: routing tables and shard
+    stacks swap wholesale (shapes may change), and sampling through the
+    new residency stays bit-identical to the host sampler."""
+    g = _graph(1500)
+    cache = _cache(g, "sharded", coverage=0.4)
+    cache.device_arrays()  # materialize so the patch path runs
+    ids = np.sort(np.random.default_rng(3).choice(
+        g.n, size=int(g.n * 0.6), replace=False)).astype(np.int64)
+    cache.replace_topology(np.array_split(ids, K))
+    da = cache.device_arrays()
+    assert da["topo_shard_indptr"].shape[0] == K
+    assert int(np.asarray(da["topo_owner"] >= 0).sum()) == len(ids)
+    seeds = np.random.default_rng(4).integers(0, g.n, 64)
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    ref = host_sample_batch(g, seeds, FANOUTS, r1)
+    lv, _ = cache_sample_batch(g, cache, seeds, FANOUTS, r2)
+    for a, b in zip(ref, lv):
+        np.testing.assert_array_equal(a, b)
