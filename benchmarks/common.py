@@ -62,6 +62,15 @@ def write_bench_json(name: str, payload: dict) -> str:
     return path
 
 
+def telemetry_paths(name: str) -> tuple:
+    """(jsonl_path, trace_path) for one benchmark's telemetry stream —
+    ``TELEM_<name>.jsonl`` + ``TRACE_<name>.json`` next to the BENCH JSONs
+    so ``run.py --json-dir`` collects them and CI uploads all three as one
+    artifact set."""
+    return (os.path.join(BENCH_JSON_DIR, f"TELEM_{name}.jsonl"),
+            os.path.join(BENCH_JSON_DIR, f"TRACE_{name}.json"))
+
+
 def default_graph(n: int = 40_000, seed: int = 0, feat_dim: int = 100) -> CSRGraph:
     """Products-profile stand-in (avg degree 50, power-law)."""
     return powerlaw_graph(n, 50, seed=seed, feat_dim=feat_dim)

@@ -7,6 +7,7 @@ hit rates, speedups) are the paper's own metrics.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import List
 
@@ -384,17 +385,30 @@ def bench_pipeline_stall() -> List[tuple]:
                Prefetcher (``prefetch_workers=1``).
       after  — bucketed specs + one-dispatch fused finalize + chained
                sampler + the per-device build pool (the defaults).
+      telemetry — the ``after`` pipeline with a full telemetry stream
+               (JSONL + Chrome trace into the BENCH json dir), gating the
+               observability layer's contracts.
 
     Reported per arm: steps/s, host-build/pack seconds, queue-dry
     (device-stall) seconds, and XLA backend-compile counts.  Parity is a
-    hard gate — both arms and a host-backend reference must produce
+    hard gate — all arms and a host-backend reference must produce
     bit-identical losses and traffic accounting (a mismatch raises, which
-    CI turns into a failure; timing rows are advisory only).  Results land
-    in ``BENCH_pipeline.json`` (``common.write_bench_json``) so the perf
+    CI turns into a failure; timing rows are advisory only).  The
+    telemetry arm adds three more hard gates: ``telemetry_disabled/
+    zero_calls`` (the ``after`` arm executed zero telemetry operations —
+    the zero-overhead-when-disabled contract, checked structurally),
+    ``telemetry/window_sum_exact`` (summing per-window deltas across every
+    JSONL snapshot reproduces the run-final TrafficCounter totals
+    exactly), and ``telemetry/span_coverage`` (device_step spans cover
+    >= 90% of the train_loop wall time).  The enabled-vs-disabled steps/s
+    ratio is recorded as an advisory overhead row.  Results land in
+    ``BENCH_pipeline.json`` (``common.write_bench_json``) so the perf
     trajectory is recorded; the committed copy is the pre-change baseline.
     """
     import jax
 
+    from repro.obs import (Telemetry, TelemetryConfig, activity_count,
+                           sum_counter_deltas, validate_stream)
     from repro.train import batch as batch_mod
 
     smoke = common.SMOKE
@@ -410,19 +424,34 @@ def bench_pipeline_stall() -> List[tuple]:
                     lr=3e-3)
     _ensure_compile_listener()
 
+    # dodge the cold-start XLA-CPU flake (see ROADMAP "Maintenance"): the
+    # first device-backend train in a fresh process can drift a few ulp,
+    # and every arm below is bitwise parity-gated — one tiny throwaway
+    # warm-up run first, the same mitigation as topology_scaling.py
+    train_gnn(g, plan, cfg, steps=2, seed=0, backend="device", gather="xla")
+
+    jsonl_path, trace_path = common.telemetry_paths("pipeline")
     arms = [("before", dict(fused=False, sampler="stepwise",
                             prefetch_workers=1)),
-            ("after", dict())]  # the defaults: fused + chain + build pool
+            ("after", dict()),  # the defaults: fused + chain + build pool
+            ("telemetry", dict())]  # defaults + full telemetry stream
     metrics, results, counters = {}, {}, {}
+    activity = {}
     for arm, kw in arms:
         batch_mod._get_fused_finalize().clear_cache()
         counter = TrafficCounter.for_plan(plan)
+        if arm == "telemetry":
+            kw = dict(kw, telemetry=Telemetry(TelemetryConfig(
+                jsonl_path=jsonl_path, trace_path=trace_path,
+                window=max(steps // 4, 1), run="pipeline_stall")))
         _COMPILE_TALLY["n"] = 0
         _COMPILE_TALLY["on"] = True
+        act0 = activity_count()
         t0 = time.perf_counter()
         res = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=counter,
                         backend="device", gather="xla", **kw)
         wall = time.perf_counter() - t0
+        activity[arm] = activity_count() - act0
         _COMPILE_TALLY["on"] = False
         results[arm], counters[arm] = res, counter
         metrics[arm] = {
@@ -437,29 +466,72 @@ def bench_pipeline_stall() -> List[tuple]:
             "finalize_variants": batch_mod._get_fused_finalize()._cache_size(),
         }
 
-    # parity gate: before == after == host, bitwise, losses and traffic
+    # parity gate: before == after == telemetry == host, bitwise
     host_counter = TrafficCounter.for_plan(plan)
     res_h = train_gnn(g, plan, cfg, steps=steps, seed=0, counter=host_counter,
                       backend="host")
     np.testing.assert_array_equal(results["before"].losses,
                                   results["after"].losses,
                                   err_msg="before/after loss divergence")
+    np.testing.assert_array_equal(results["after"].losses,
+                                  results["telemetry"].losses,
+                                  err_msg="telemetry perturbed the run")
     np.testing.assert_array_equal(results["after"].losses, res_h.losses,
                                   err_msg="device/host loss divergence")
     for a, b in ((counters["before"], counters["after"]),
+                 (counters["after"], counters["telemetry"]),
                  (counters["after"], host_counter)):
         for f in ("feature_requests", "feature_hits", "topo_requests",
                   "topo_hits", "pcie_transactions"):
             assert getattr(a, f) == getattr(b, f), f
         np.testing.assert_array_equal(a.bytes_matrix, b.bytes_matrix)
 
+    # telemetry gates: zero-overhead-disabled, window-sum exactness, and
+    # span coverage — all hard (assert), plus an advisory overhead row
+    assert activity["after"] == 0, (
+        f"telemetry=None run executed {activity['after']} telemetry "
+        f"operations — zero-overhead contract broken")
+    with open(jsonl_path) as f:
+        lines = [json.loads(ln) for ln in f]
+    validate_stream(lines)
+    snaps = [ln for ln in lines if ln["kind"] == "snapshot"]
+    delta_sums = sum_counter_deltas(snaps)
+    final = snaps[-1]["counters"]
+    for key, total in ((k, v["total"]) for k, v in final.items()):
+        assert delta_sums[key] == total, (
+            f"window deltas for {key} sum to {delta_sums[key]}, "
+            f"run-final total is {total}")
+    tc = counters["telemetry"]
+    assert final["traffic.feature_requests"]["total"] == tc.feature_requests
+    assert (final["traffic.pcie_transactions"]["total"]
+            == tc.pcie_transactions)
+    spans = [ln for ln in lines if ln["kind"] == "span"]
+    loop_us = sum(s["dur_us"] for s in spans if s["name"] == "train_loop")
+    step_us = sum(s["dur_us"] for s in spans if s["name"] == "device_step")
+    coverage = step_us / max(loop_us, 1e-9)
+    assert coverage >= 0.9, (
+        f"device_step spans cover only {coverage:.1%} of train_loop")
+    overhead = (metrics["after"]["steps_per_s"]
+                / max(metrics["telemetry"]["steps_per_s"], 1e-9))
+
     payload = {"smoke": smoke, "steps": steps, "batch_size": bs,
                "n_vertices": n, "fanouts": list(fanouts),
-               "backend": jax.default_backend(), **{
+               "backend": jax.default_backend(),
+               "telemetry_span_coverage": coverage,
+               "telemetry_overhead_ratio": overhead, **{
                    arm: metrics[arm] for arm, _ in arms}}
     path = common.write_bench_json("pipeline", payload)
 
-    rows = [("pipeline_stall/parity", 1, "before==after==host, bitwise")]
+    rows = [("pipeline_stall/parity", 1,
+             "before==after==telemetry==host, bitwise"),
+            ("pipeline_stall/telemetry_disabled/zero_calls", 1,
+             "activity_count delta == 0 on telemetry=None arm"),
+            ("pipeline_stall/telemetry/window_sum_exact", 1,
+             f"{len(final)} counters, {len(snaps)} snapshots"),
+            ("pipeline_stall/telemetry/span_coverage", coverage,
+             "device_step / train_loop wall, gated >= 0.9"),
+            ("pipeline_stall/telemetry/overhead_ratio", overhead,
+             "disabled/enabled steps-per-s, advisory")]
     for arm, _ in arms:
         m = metrics[arm]
         rows += [

@@ -11,6 +11,11 @@ additionally write ``BENCH_<name>.json`` next to the repo root — or into
 ``--json-dir`` — so the perf trajectory is recorded run over run; parity
 failures inside a benchmark surface as ``ERROR`` rows (what CI gates on),
 while timings stay advisory.
+
+``pipeline_stall`` also emits a full telemetry stream into the same
+directory (``TELEM_pipeline.jsonl`` + ``TRACE_pipeline.json``, see
+``repro.obs``): point ``python -m repro.obs.report`` at the JSONL for the
+throughput/stall/hit-rate story, or load the trace in Perfetto.
 """
 from __future__ import annotations
 

@@ -280,3 +280,17 @@ class OnlineCacheManager:
 
     def summary(self) -> dict:
         return self.stats.summary()
+
+    def publish_metrics(self, reg) -> None:
+        """Refresh-loop tallies for the telemetry registry (repro.obs):
+        monotonic counters for checks/refreshes/admissions plus the latest
+        drift overlap as a gauge.  Pulled at snapshot boundaries only —
+        the refresh loop itself is untouched."""
+        s = self.stats
+        reg.counter("refresh.checks").set_total(s.checks)
+        reg.counter("refresh.refreshes").set_total(s.refreshes)
+        reg.counter("refresh.admitted").set_total(s.admitted)
+        reg.counter("refresh.evicted").set_total(s.evicted)
+        reg.counter("refresh.topo_rebuilds").set_total(s.topo_rebuilds)
+        reg.counter("refresh.bytes_h2d").set_total(s.refresh_bytes_h2d)
+        reg.gauge("refresh.last_overlap").set(s.last_overlap)

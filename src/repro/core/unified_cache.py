@@ -75,15 +75,27 @@ class TrafficCounter:
         return cls.for_devices([d for c in plan.partition.cliques for d in c])
 
     def merge(self, other: "TrafficCounter"):
-        self.bytes_matrix += other.bytes_matrix
-        self.topo_bytes_matrix += other.topo_bytes_matrix
-        self.pcie_transactions += other.pcie_transactions
-        self.feature_requests += other.feature_requests
-        self.feature_hits += other.feature_hits
-        self.topo_requests += other.topo_requests
-        self.topo_hits += other.topo_hits
-        self.host_sample_syncs += other.host_sample_syncs
-        self.host_sampled_edges += other.host_sampled_edges
+        """Fold ``other``'s tallies into this counter.  Takes BOTH locks
+        (id-ordered, so two concurrent merges of the same pair cannot
+        deadlock): ``other`` may still be fed by prefetch workers, and an
+        unlocked read of its ten tallies mid-update would tear — some
+        fields pre-, some post-accounting — losing updates from the
+        merged view.  Regression-tested with a racing worker in
+        ``tests/test_cache_and_planner.py``."""
+        if other is self:
+            raise ValueError("cannot merge a TrafficCounter into itself")
+        first, second = ((self, other) if id(self) < id(other)
+                         else (other, self))
+        with first.lock, second.lock:
+            self.bytes_matrix += other.bytes_matrix
+            self.topo_bytes_matrix += other.topo_bytes_matrix
+            self.pcie_transactions += other.pcie_transactions
+            self.feature_requests += other.feature_requests
+            self.feature_hits += other.feature_hits
+            self.topo_requests += other.topo_requests
+            self.topo_hits += other.topo_hits
+            self.host_sample_syncs += other.host_sample_syncs
+            self.host_sampled_edges += other.host_sampled_edges
 
     @property
     def feature_hit_rate(self) -> float:
@@ -134,6 +146,41 @@ class TrafficCounter:
                         "host_fill_bytes": int(
                             self.bytes_matrix[devs, -1].sum())})
         return out
+
+    def publish_metrics(self, reg) -> None:
+        """Mirror the live tallies into a telemetry ``MetricsRegistry``
+        (repro.obs) — pulled at snapshot boundaries, so accounting hot
+        paths pay nothing.  One consistent capture under the lock, then
+        monotonic ``set_total`` per counter: the registry's window deltas
+        telescope to these exact totals.  Byte matrices publish both as
+        per-tier aggregates (local diagonal / intra-clique peer /
+        PCIe column) and as per-``(dst, src)`` pair counters for every
+        pair that has ever moved a byte."""
+        with self.lock:
+            bm = self.bytes_matrix.copy()
+            tm = self.topo_bytes_matrix.copy()
+            scalars = {
+                "traffic.feature_requests": self.feature_requests,
+                "traffic.feature_hits": self.feature_hits,
+                "traffic.topo_requests": self.topo_requests,
+                "traffic.topo_hits": self.topo_hits,
+                "traffic.pcie_transactions": self.pcie_transactions,
+                "traffic.host_sample_syncs": self.host_sample_syncs,
+                "traffic.host_sampled_edges": self.host_sampled_edges,
+            }
+        for name, v in scalars.items():
+            reg.counter(name).set_total(int(v))
+        for name, m in (("traffic.feat_bytes", bm),
+                        ("traffic.topo_bytes", tm)):
+            dev = m[:, :-1]
+            reg.counter(name, tier="local").set_total(int(np.trace(dev)))
+            reg.counter(name, tier="peer").set_total(
+                int(dev.sum() - np.trace(dev)))
+            reg.counter(name, tier="pcie").set_total(int(m[:, -1].sum()))
+            for dst, src in zip(*np.nonzero(m)):
+                src_lbl = "host" if src == self.n_devices else int(src)
+                reg.counter(f"{name}_pair", dst=int(dst),
+                            src=src_lbl).set_total(int(m[dst, src]))
 
 
 class CliqueCache:
@@ -785,6 +832,14 @@ class CliqueCache:
                 else:
                     counter.topo_bytes_matrix[
                         requester_dev, requester_dev] += hb * int(hit.sum())
+
+    def publish_metrics(self, reg, clique: int = 0) -> None:
+        """Residency gauges for the telemetry registry (repro.obs):
+        cached feature/topology rows and the refresh epoch, labeled per
+        clique.  Pulled at snapshot boundaries only."""
+        reg.gauge("cache.feat_rows", clique=clique).set(len(self.feat_ids))
+        reg.gauge("cache.topo_rows", clique=clique).set(len(self.topo_ids))
+        reg.gauge("cache.epoch", clique=clique).set(self.epoch)
 
 
 def stack_hierarchical_shards(caches: Sequence[CliqueCache],

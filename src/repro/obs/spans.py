@@ -1,0 +1,107 @@
+"""Span tracing: thread-aware begin/end intervals over the training
+pipeline, with an optional ``jax.profiler.TraceAnnotation`` bridge.
+
+A :class:`Span` is a context manager handed out by ``Telemetry.span``.
+On exit it reports one completed record — name, wall-clock interval
+(relative to the stream's t0, monotonic clock), thread id/name, optional
+step and attributes — to the recorder (the Telemetry object), which fans
+it out to the JSONL and Chrome-trace sinks.  Emitting only *completed*
+spans keeps every line a balanced begin/end pair by construction; the
+tracer still tracks per-thread open-span depth so shutdown can assert
+nothing was left dangling.
+
+The jax bridge wraps the same interval in a ``TraceAnnotation`` so the
+span shows up inside an XLA profiler trace (``jax.profiler.trace``)
+aligned with device activity; it degrades to a no-op when jax (or the
+profiler API) is unavailable.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+_TRACE_ANNOTATION = None
+_TRACE_ANNOTATION_TRIED = False
+
+
+def _trace_annotation_cls():
+    """``jax.profiler.TraceAnnotation`` if importable, else None — resolved
+    once, lazily, so importing repro.obs never pulls in jax."""
+    global _TRACE_ANNOTATION, _TRACE_ANNOTATION_TRIED
+    if not _TRACE_ANNOTATION_TRIED:
+        _TRACE_ANNOTATION_TRIED = True
+        try:
+            from jax.profiler import TraceAnnotation
+            _TRACE_ANNOTATION = TraceAnnotation
+        except Exception:
+            _TRACE_ANNOTATION = None
+    return _TRACE_ANNOTATION
+
+
+class Span:
+    """One begin/end interval.  Re-entrant use of a single instance is not
+    supported — ``Telemetry.span`` constructs a fresh one per ``with``."""
+
+    __slots__ = ("name", "step", "attrs", "_recorder", "_jax", "_t0_ns",
+                 "_annotation", "_tracker")
+
+    def __init__(self, recorder: Callable, name: str,
+                 step: Optional[int] = None, jax_annotation: bool = False,
+                 tracker: Optional["OpenSpanTracker"] = None, **attrs):
+        self.name = name
+        self.step = step
+        self.attrs = attrs
+        self._recorder = recorder
+        self._jax = jax_annotation
+        self._t0_ns = 0
+        self._annotation = None
+        self._tracker = tracker
+
+    def __enter__(self) -> "Span":
+        if self._tracker is not None:
+            self._tracker.push()
+        if self._jax:
+            cls = _trace_annotation_cls()
+            if cls is not None:
+                self._annotation = cls(self.name)
+                self._annotation.__enter__()
+        self._t0_ns = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        end_ns = time.perf_counter_ns()
+        if self._annotation is not None:
+            self._annotation.__exit__(exc_type, exc, tb)
+            self._annotation = None
+        if self._tracker is not None:
+            self._tracker.pop()
+        t = threading.current_thread()
+        self._recorder(self.name, self._t0_ns, end_ns - self._t0_ns,
+                       t.ident or 0, t.name, self.step, self.attrs)
+
+
+class OpenSpanTracker:
+    """Per-thread open-span depth — the balance check behind the
+    'no dangling spans at shutdown' assertion and the nesting tests."""
+
+    def __init__(self):
+        self._local = threading.local()
+        self._lock = threading.Lock()
+        self._open_total = 0
+
+    def push(self) -> None:
+        depth = getattr(self._local, "depth", 0)
+        self._local.depth = depth + 1
+        with self._lock:
+            self._open_total += 1
+
+    def pop(self) -> None:
+        self._local.depth = getattr(self._local, "depth", 1) - 1
+        with self._lock:
+            self._open_total -= 1
+
+    @property
+    def open_total(self) -> int:
+        with self._lock:
+            return self._open_total

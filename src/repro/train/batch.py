@@ -68,6 +68,7 @@ from repro.core.unified_cache import CliqueCache, TrafficCounter
 from repro.graph.csr import CSRGraph
 from repro.graph.sampling import (cache_sample_batch, cache_sample_dispatch,
                                   host_sample_batch, unique_vertices)
+from repro.obs import maybe_span
 
 BACKENDS = ("host", "device", "sharded")
 
@@ -207,6 +208,10 @@ class BatchBuilder:
         # every sampled batch's level tensors; pure recording, so attaching
         # one changes neither batches nor traffic accounting
         self.observer = observer
+        # telemetry tap (repro.obs.Telemetry), attached by the train loop:
+        # finalize/H2D-staging spans when set, a shared no-op context when
+        # None — never perturbs batches or accounting
+        self.telemetry = None
 
     # -- phase 1: host thread --------------------------------------------
     def build_spec(self, seeds: np.ndarray,
@@ -270,7 +275,9 @@ class HostBatchBuilder(BatchBuilder):
     def finalize(self, spec):
         import jax.numpy as jnp
 
-        return {k: jnp.asarray(v) for k, v in self.assemble(spec).items()}
+        with maybe_span(self.telemetry, "finalize", dev=self.dev):
+            return {k: jnp.asarray(v)
+                    for k, v in self.assemble(spec).items()}
 
 
 class DeviceBatchBuilder(BatchBuilder):
@@ -386,18 +393,22 @@ class DeviceBatchBuilder(BatchBuilder):
             return self._finalize_unfused(spec)
         import jax.numpy as jnp
 
-        table = self._table(spec.cache_epoch)
-        # jnp.array = guaranteed copy: the staging buffer goes back to the
-        # pool right here, while the batch it fed is still in flight
-        miss = jnp.array(spec.miss_feats)
-        self.release_spec(spec)
-        idx = spec.cache_pos.astype(np.int32)  # -1 at miss AND pad rows
-        pos = tuple(np.ascontiguousarray(p.reshape(-1).astype(np.int32))
-                    for p in spec.level_pos)
-        valid = tuple(lvl >= 0 for lvl in spec.levels)
-        return _get_fused_finalize()(table, idx, miss, spec.miss_inv,
-                                     spec.labels, pos, valid,
-                                     impl=self.gather, D=self.g.feat_dim)
+        tele = self.telemetry
+        with maybe_span(tele, "finalize", dev=self.dev):
+            table = self._table(spec.cache_epoch)
+            # jnp.array = guaranteed copy: the staging buffer goes back to
+            # the pool right here, while the batch it fed is still in flight
+            with maybe_span(tele, "h2d_staging", dev=self.dev,
+                            rows=spec.n_miss):
+                miss = jnp.array(spec.miss_feats)
+            self.release_spec(spec)
+            idx = spec.cache_pos.astype(np.int32)  # -1 at miss AND pad rows
+            pos = tuple(np.ascontiguousarray(p.reshape(-1).astype(np.int32))
+                        for p in spec.level_pos)
+            valid = tuple(lvl >= 0 for lvl in spec.levels)
+            return _get_fused_finalize()(table, idx, miss, spec.miss_inv,
+                                         spec.labels, pos, valid,
+                                         impl=self.gather, D=self.g.feat_dim)
 
     # -- legacy (pre-fused) finalize: the benchmark's *before* arm --------
     def _gather_cached(self, idx: np.ndarray, epoch: int):

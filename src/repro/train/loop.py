@@ -31,6 +31,7 @@ from repro.graph.csr import CSRGraph
 from repro.models.gnn import (GNNConfig, defs as gnn_defs,
                               forward as gnn_forward, loss_fn as gnn_loss)
 from repro.models.params import init_from_defs
+from repro.obs import maybe_span
 from repro.train.batch import (HostBatchBuilder, make_batch_builder,
                                pack_sharded_specs)
 from repro.train.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
@@ -137,6 +138,9 @@ class GNNTrainResult:
     # sampling-path traffic digest (from the shared TrafficCounter): how
     # much neighbor sampling ran on device vs fell back to the host CSR
     sampling: dict = dataclasses.field(default_factory=dict)
+    # telemetry digest (repro.obs): sink paths + span/snapshot counts when
+    # train_gnn ran with telemetry, {} otherwise
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -150,7 +154,7 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               gather: str = "auto", fused: bool = True,
               bucket: int = 256, sampler: str = "chain",
               refresh_interval: Optional[int] = None,
-              refresh_config=None) -> GNNTrainResult:
+              refresh_config=None, telemetry=None) -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
     tablets and draws seeds from the full training set (the Fig. 11 baseline).
 
@@ -190,6 +194,17 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     ``refresh_interval=None`` (default) disables the manager entirely —
     batches and traffic counts are bit-identical to a run without it.
 
+    ``telemetry`` (a ``repro.obs.Telemetry`` or ``TelemetryConfig``)
+    instruments the run: spans around spec builds (prefetch workers),
+    pack, H2D staging, fused finalize, each device step and the refresh
+    hook; windowed metric snapshots every ``config.window`` steps pulled
+    from the TrafficCounter/Prefetcher/OnlineCacheManager/CliqueCaches;
+    a JSONL stream plus a Perfetto-loadable Chrome trace.  The telemetry
+    object is closed (final snapshot, sinks flushed) when this returns.
+    ``telemetry=None`` (default) is the hard zero-overhead path: no
+    telemetry code runs and results are bit-identical to pre-telemetry
+    builds.
+
     With ``mesh`` (a jax Mesh with a "data" axis) the step runs as explicit
     shard_map data parallelism; ``compress_grads=True`` additionally swaps
     the gradient all-reduce for the int8 error-feedback compressed version
@@ -226,6 +241,14 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     n_dev = len(devices)
     per_dev = max(cfg.batch_size // max(n_dev, 1), 16)
     counter = counter if counter is not None else TrafficCounter.for_devices(devices)
+
+    tele = telemetry
+    if tele is not None and not hasattr(tele, "span"):
+        # a TelemetryConfig (or anything config-shaped): build the
+        # Telemetry here so callers can pass plain knobs
+        from repro.obs import Telemetry
+
+        tele = Telemetry(tele)
 
     key = jax.random.PRNGKey(seed)
     params = init_from_defs(gnn_defs(cfg), key)
@@ -306,6 +329,7 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             kw["observer"] = manager.observer_for(d)
         builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
                                          counter, d, **kw)
+        builders[d].telemetry = tele
 
     sharded_step = None
     clique_caches = None
@@ -351,9 +375,18 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         the serial build order."""
         rng, tablet, builder = rngs[d], streams[d], builders[d]
 
-        def spec_fn(step: int):
-            seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
-            return builder.build_spec(seeds, rng)
+        if tele is None:
+            def spec_fn(step: int):
+                seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
+                return builder.build_spec(seeds, rng)
+        else:
+            def spec_fn(step: int):
+                # runs on a prefetch worker thread: the span is what makes
+                # the build pool's concurrency visible in the trace
+                with tele.span("spec_build", step=step, dev=d):
+                    seeds = tablet[rng.integers(0, len(tablet),
+                                                size=per_dev)]
+                    return builder.build_spec(seeds, rng)
         return spec_fn
 
     def finalize_batch(item):
@@ -399,55 +432,96 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                                             if manager is not None else None),
                             pack_fn=(pack_fn if backend == "sharded"
                                      else None),
-                            extra_summary=sampling_summary)
+                            extra_summary=sampling_summary,
+                            telemetry=tele)
+    if tele is not None:
+        # metric sources pulled at every windowed snapshot: components
+        # mirror their own tallies, nothing extra runs on hot paths
+        tele.add_source("traffic", counter.publish_metrics)
+        tele.add_source("prefetch", prefetcher.publish_metrics)
+        if manager is not None:
+            tele.add_source("refresh", manager.publish_metrics)
+        if plan is not None:
+            for ci, cache in enumerate(plan.caches):
+                tele.add_source(
+                    f"cache{ci}",
+                    (lambda reg, c=cache, ci=ci:
+                     c.publish_metrics(reg, clique=ci)))
+        h_step = tele.registry.histogram("step.time_s")
     monitor = StragglerMonitor()
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
     t_epoch = time.perf_counter()
     try:
-        next_batch = (finalize_batch(prefetcher.get())
-                      if steps > step0 else None)
-        for step in range(step0, steps):
-            t0 = time.perf_counter()
-            batch = next_batch
-            if ef_state is not None:
-                params, opt_state, ef_state, loss = train_step(
-                    params, opt_state, ef_state, batch)
-                acc = jnp.zeros(())
-            elif backend == "sharded":
-                shards, packed = batch
-                params, opt_state, loss, acc = sharded_step(
-                    params, opt_state, shards, packed)
-            else:
-                params, opt_state, loss, acc = train_step_plain(
-                    params, opt_state, batch)
-            # build batch i+1 while the device chews on step i: the host
-            # phase comes off the prefetch queue, and finalize's device
-            # gather rides the same async dispatch stream as the step.
+        # priming fetch is pipeline warm-up (first host build, cold
+        # workers), so it gets its own span; train_loop is the
+        # steady-state stepping loop that device_step spans tile.
+        with maybe_span(tele, "pipeline_prime"):
             next_batch = (finalize_batch(prefetcher.get())
-                          if step + 1 < steps else None)
-            loss.block_until_ready()
-            monitor.record(time.perf_counter() - t0)
-            losses.append(float(loss))
-            accs.append(float(acc))
-            if ckpt and (step + 1) % checkpoint_every == 0:
-                ckpt.save(step + 1, (params, opt_state))
-            if (step + 1) % steps_per_epoch == 0:
-                epoch_times.append(time.perf_counter() - t_epoch)
-                t_epoch = time.perf_counter()
+                          if steps > step0 else None)
+        with maybe_span(tele, "train_loop"):
+            for step in range(step0, steps):
+                t0 = time.perf_counter()
+                # the device-step span covers dispatch, the overlapped
+                # prefetch of step i+1, and the block on step i's loss —
+                # i.e. the whole per-step wall slice the trace attributes
+                with maybe_span(tele, "device_step", step=step):
+                    batch = next_batch
+                    if ef_state is not None:
+                        params, opt_state, ef_state, loss = train_step(
+                            params, opt_state, ef_state, batch)
+                        acc = jnp.zeros(())
+                    elif backend == "sharded":
+                        shards, packed = batch
+                        params, opt_state, loss, acc = sharded_step(
+                            params, opt_state, shards, packed)
+                    else:
+                        params, opt_state, loss, acc = train_step_plain(
+                            params, opt_state, batch)
+                    # build batch i+1 while the device chews on step i:
+                    # the host phase comes off the prefetch queue, and
+                    # finalize's device gather rides the same async
+                    # dispatch stream as the step.
+                    next_batch = (finalize_batch(prefetcher.get())
+                                  if step + 1 < steps else None)
+                    loss.block_until_ready()
+                dt = time.perf_counter() - t0
+                monitor.record(dt)
+                losses.append(float(loss))
+                accs.append(float(acc))
+                if tele is not None:
+                    h_step.observe(dt)
+                    if (step + 1) % tele.config.window == 0:
+                        tele.snapshot(step + 1)
+                if ckpt and (step + 1) % checkpoint_every == 0:
+                    ckpt.save(step + 1, (params, opt_state))
+                if (step + 1) % steps_per_epoch == 0:
+                    epoch_times.append(time.perf_counter() - t_epoch)
+                    t_epoch = time.perf_counter()
     finally:
         # close() may re-raise a worker exception (see Prefetcher.close);
-        # the final checkpoint must be written either way
+        # the final telemetry snapshot (exact totals need every worker
+        # build accounted) and the final checkpoint must happen either way
         try:
             prefetcher.close()
         finally:
-            if ckpt:
-                ckpt.save(steps, (params, opt_state))
-                ckpt.close()
+            try:
+                if tele is not None:
+                    tele.close(final_step=steps)
+            finally:
+                if ckpt:
+                    ckpt.save(steps, (params, opt_state))
+                    ckpt.close()
     return GNNTrainResult(losses=losses, accs=accs, epoch_times=epoch_times,
                           counter=counter, straggler=monitor.summary(),
                           steps=steps - step0, backend=backend,
                           pipeline=prefetcher.summary(),
                           refresh=(manager.summary()
                                    if manager is not None else {}),
-                          sampling=sampling_summary())
+                          sampling=sampling_summary(),
+                          telemetry=({} if tele is None else {
+                              "jsonl_path": tele.config.jsonl_path,
+                              "trace_path": tele.config.trace_path,
+                              "spans": tele.span_count,
+                              "open_spans": tele.open_spans,
+                              "window": tele.config.window}))

@@ -50,7 +50,8 @@ class Prefetcher:
                  part_fns: Optional[List[Callable[[int], object]]] = None,
                  part_group_sizes: Optional[List[int]] = None,
                  workers: Optional[int] = None,
-                 extra_summary: Optional[Callable[[], dict]] = None):
+                 extra_summary: Optional[Callable[[], dict]] = None,
+                 telemetry=None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
@@ -89,7 +90,15 @@ class Prefetcher:
         ``extra_summary`` is an optional zero-arg callable merged into
         ``summary()`` at read time — the train loop uses it to surface
         builder-side stats (deferred host-fallback timing) next to the
-        queue stats without the Prefetcher knowing about builders."""
+        queue stats without the Prefetcher knowing about builders.  Its
+        keys must not collide with the built-in build-stat keys: a
+        collision raises instead of silently overwriting a stat.
+
+        ``telemetry`` (a repro.obs.Telemetry) instruments the pipeline:
+        spans around each step's build/pack and the refresh hook (on the
+        prefetch thread) and around every ``get()`` (consumer thread),
+        plus build-time and queue-dry histograms in the registry.  With
+        the default ``None`` not one telemetry instruction runs."""
         if (batch_fn is None) == (part_fns is None):
             raise ValueError("pass exactly one of batch_fn / part_fns")
         self._batch_fn = batch_fn
@@ -121,6 +130,10 @@ class Prefetcher:
         self._hook = pre_batch_hook
         self._pack_fn = pack_fn
         self._extra_summary = extra_summary
+        self._tele = telemetry
+        if telemetry is not None:
+            self._h_build = telemetry.registry.histogram("prefetch.build_s")
+            self._h_dry = telemetry.registry.histogram("prefetch.dry_s")
         self._build_s = 0.0
         self._pack_s = 0.0
         self._built = 0
@@ -155,18 +168,32 @@ class Prefetcher:
         return self._regroup([f.result() for f in futs])
 
     def _worker(self):
+        tele = self._tele
         try:
             while not self._stop.is_set():
                 if self._limit is not None and self._step >= self._limit:
                     return
                 if self._hook is not None:
-                    self._hook(self._step)
+                    if tele is not None:
+                        with tele.span("refresh_hook", step=self._step):
+                            self._hook(self._step)
+                    else:
+                        self._hook(self._step)
                 t0 = time.perf_counter()
-                batch = self._build(self._step)
+                if tele is not None:
+                    with tele.span("prefetch_build", step=self._step):
+                        batch = self._build(self._step)
+                    self._h_build.observe(time.perf_counter() - t0)
+                else:
+                    batch = self._build(self._step)
                 self._build_s += time.perf_counter() - t0
                 if self._pack_fn is not None:
                     t0 = time.perf_counter()
-                    batch = self._pack_fn(batch)
+                    if tele is not None:
+                        with tele.span("prefetch_pack", step=self._step):
+                            batch = self._pack_fn(batch)
+                    else:
+                        batch = self._pack_fn(batch)
                     self._pack_s += time.perf_counter() - t0
                 self._built += 1
                 self._step += 1
@@ -184,7 +211,18 @@ class Prefetcher:
         exception surfaces promptly even while this thread is blocked on an
         empty queue (a dead worker used to mean a bare ``queue.Empty``
         after the full timeout).  Wall time spent in here is accumulated as
-        queue-dry (device-stall) time for ``summary()``."""
+        queue-dry (device-stall) time for ``summary()`` (and, with
+        telemetry, a consumer-thread span + the queue-dry histogram)."""
+        if self._tele is None:
+            return self._get(timeout)
+        t0 = time.perf_counter()
+        with self._tele.span("prefetch_get"):
+            try:
+                return self._get(timeout)
+            finally:
+                self._h_dry.observe(time.perf_counter() - t0)
+
+    def _get(self, timeout: float) -> dict:
         t0 = time.perf_counter()
         deadline = t0 + timeout
         try:
@@ -218,8 +256,29 @@ class Prefetcher:
                "queue_dry_s_mean": self._dry_s / max(self._gets, 1),
                "build_workers": self._workers}
         if self._extra_summary is not None:
-            out.update(self._extra_summary())
+            extra = self._extra_summary()
+            clash = sorted(set(extra) & set(out))
+            if clash:
+                # a silent dict.update here used to let a builder-side key
+                # shadow a build stat; namespace the extra keys instead
+                raise ValueError(
+                    f"extra_summary keys collide with build stats: {clash} "
+                    "— namespace them (e.g. 'sampling/...')")
+            out.update(extra)
         return out
+
+    def publish_metrics(self, reg) -> None:
+        """Queue/build tallies for the telemetry registry (repro.obs),
+        pulled at snapshot boundaries: totals mirror ``summary()`` (the
+        per-observation histograms are fed live from the hot path when
+        telemetry is attached)."""
+        reg.counter("prefetch.batches_built").set_total(self._built)
+        reg.counter("prefetch.gets").set_total(self._gets)
+        reg.counter("prefetch.build_s").set_total(self._build_s)
+        reg.counter("prefetch.pack_s").set_total(self._pack_s)
+        reg.counter("prefetch.queue_dry_s").set_total(self._dry_s)
+        reg.gauge("prefetch.queue_depth").set(self._q.qsize())
+        reg.gauge("prefetch.build_workers").set(self._workers)
 
     def close(self):
         """Stop the worker.  A worker exception that was never surfaced via

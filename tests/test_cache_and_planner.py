@@ -157,3 +157,63 @@ def test_device_sample_cached_valid(setup):
         for u in out[i]:
             assert (u == -1 and not nb) or int(u) in nb
     assert (out[16:] == -1).all()
+
+
+def test_traffic_merge_self_rejected():
+    c = TrafficCounter(n_devices=2)
+    with pytest.raises(ValueError, match="itself"):
+        c.merge(c)
+
+
+def test_traffic_merge_locked_against_racing_worker():
+    """Regression: merge() used to read ``other`` without taking either
+    lock, so a merge concurrent with accounting could tear — some tallies
+    pre-, some post-update.  With both locks (id-ordered) every snapshot
+    the merger folds in is internally consistent: the two fields the
+    worker always bumps together can never disagree in the merged view."""
+    import threading
+
+    src = TrafficCounter(n_devices=2)
+    stop = threading.Event()
+
+    def worker():
+        while not stop.is_set():
+            with src.lock:
+                # one atomic accounting quantum: both fields move together
+                src.feature_requests += 1
+                src.feature_hits += 1
+                src.bytes_matrix[0, 0] += 64
+
+    t = threading.Thread(target=worker)
+    t.start()
+    try:
+        for _ in range(200):
+            dst = TrafficCounter(n_devices=2)
+            dst.merge(src)
+            assert dst.feature_requests == dst.feature_hits
+            assert dst.bytes_matrix[0, 0] == 64 * dst.feature_hits
+    finally:
+        stop.set()
+        t.join()
+
+
+def test_traffic_merge_concurrent_merges_no_deadlock():
+    """Two threads merging the same pair in opposite directions must not
+    deadlock (the id-ordered lock acquisition) and must not lose updates."""
+    import threading
+
+    a = TrafficCounter(n_devices=2)
+    b = TrafficCounter(n_devices=2)
+    a.feature_requests = 1
+    b.feature_requests = 10
+
+    def m(x, y, n):
+        for _ in range(n):
+            x.merge(y)
+
+    t1 = threading.Thread(target=m, args=(a, b, 50))
+    t2 = threading.Thread(target=m, args=(b, a, 50))
+    t1.start(); t2.start()
+    t1.join(timeout=30); t2.join(timeout=30)
+    assert not t1.is_alive() and not t2.is_alive(), "merge deadlocked"
+    assert a.feature_requests >= 11 and b.feature_requests >= 11

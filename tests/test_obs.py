@@ -1,0 +1,344 @@
+"""Telemetry layer (repro.obs): registry window deltas, schema-validated
+JSONL streams, span balance across threads, the Perfetto trace sink, the
+reporter CLI, and the zero-overhead-when-disabled contract."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cliques import topology_matrix
+from repro.core.planner import build_plan
+from repro.core.unified_cache import TrafficCounter
+from repro.graph.csr import powerlaw_graph
+from repro.models.gnn import GNNConfig
+from repro.obs import (SCHEMA_VERSION, Telemetry, TelemetryConfig,
+                       activity_count, flat_name, maybe_span,
+                       sum_counter_deltas, validate_stream)
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.report import digest, load_stream, main as report_main
+from repro.obs.schema import TelemetrySchemaError, validate_line
+from repro.obs.sinks import ChromeTraceSink
+from repro.train.loop import train_gnn
+
+
+# ---------------- registry ----------------
+
+def test_counter_window_deltas_telescope():
+    reg = MetricsRegistry()
+    c = reg.counter("x")
+    c.inc(5)
+    counters, _, _ = reg.window_snapshot()
+    assert counters["x"] == {"total": 5, "delta": 5}
+    c.inc(3)
+    counters, _, _ = reg.window_snapshot()
+    assert counters["x"] == {"total": 8, "delta": 3}
+    counters, _, _ = reg.window_snapshot()  # idle window
+    assert counters["x"] == {"total": 8, "delta": 0}
+
+
+def test_set_total_monotonic():
+    reg = MetricsRegistry()
+    c = reg.counter("t")
+    c.set_total(10)
+    with pytest.raises(ValueError, match="backwards"):
+        c.set_total(9)
+
+
+def test_counter_memoized_by_labels():
+    reg = MetricsRegistry()
+    assert reg.counter("b", tier="pcie") is reg.counter("b", tier="pcie")
+    assert reg.counter("b", tier="pcie") is not reg.counter("b", tier="peer")
+
+
+def test_flat_name_sorts_labels():
+    assert flat_name("m", {}) == "m"
+    assert flat_name("m", {"b": 1, "a": "x"}) == "m{a=x,b=1}"
+
+
+def test_histogram_buckets_and_deltas():
+    reg = MetricsRegistry()
+    h = reg.histogram("d", edges=(1.0, 10.0))
+    for v in (0.5, 0.5, 5.0, 50.0):
+        h.observe(v)
+    _, _, hists = reg.window_snapshot()
+    snap = hists["d"]
+    assert snap["edges"] == [1.0, 10.0]
+    assert snap["counts"] == [2, 1, 1]  # <=1, <=10, +inf overflow
+    assert snap["delta"] == [2, 1, 1]
+    assert snap["count"] == 4 and snap["sum"] == pytest.approx(56.0)
+    h.observe(0.1)
+    _, _, hists = reg.window_snapshot()
+    assert hists["d"]["delta"] == [1, 0, 0]
+    assert hists["d"]["counts"] == [3, 1, 1]
+
+
+def test_histogram_edge_validation():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram(())
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram((1.0, 1.0))
+    reg = MetricsRegistry()
+    reg.histogram("h", edges=(1.0, 2.0))
+    with pytest.raises(ValueError, match="different edges"):
+        reg.histogram("h", edges=(1.0, 3.0))
+
+
+def test_sum_counter_deltas_filters_by_prefix():
+    snaps = [{"counters": {"a.x": {"total": 1, "delta": 1},
+                           "b.y": {"total": 2, "delta": 2}}},
+             {"counters": {"a.x": {"total": 4, "delta": 3}}}]
+    assert sum_counter_deltas(snaps) == {"a.x": 4, "b.y": 2}
+    assert sum_counter_deltas(snaps, name="a.") == {"a.x": 4}
+
+
+# ---------------- schema ----------------
+
+def test_schema_rejects_malformed_lines():
+    ok = {"v": SCHEMA_VERSION, "kind": "span", "name": "s", "ts_us": 1.0,
+          "dur_us": 2.0, "tid": 7, "thread": "main"}
+    assert validate_line(ok) == "span"
+    for breakage, patch in [
+            ("unknown kind", {"kind": "nope"}),
+            ("extra field", {"bogus": 1}),
+            ("wrong type", {"ts_us": "late"}),
+            ("bool as number", {"dur_us": True}),
+            ("negative duration", {"dur_us": -1.0}),
+            ("future schema", {"v": SCHEMA_VERSION + 1})]:
+        bad = dict(ok, **patch)
+        with pytest.raises(TelemetrySchemaError):
+            validate_line(bad)
+    with pytest.raises(TelemetrySchemaError, match="name"):
+        validate_line({k: v for k, v in ok.items() if k != "name"})
+
+
+def test_snapshot_line_shape_enforced():
+    line = {"v": SCHEMA_VERSION, "kind": "snapshot", "step": 5,
+            "from_step": 0, "ts_us": 1.0,
+            "counters": {"c": {"total": 3, "delta": 3}},
+            "gauges": {"g": 1.5},
+            "hists": {"h": {"edges": [1.0], "counts": [1, 0],
+                            "delta": [1, 0], "sum": 0.5, "count": 1}}}
+    assert validate_line(line) == "snapshot"
+    bad = dict(line, counters={"c": {"total": 3}})  # missing delta
+    with pytest.raises(TelemetrySchemaError):
+        validate_line(bad)
+    bad = dict(line, hists={"h": {"edges": [1.0], "counts": [1],
+                                  "delta": [1], "sum": 0.5, "count": 1}})
+    with pytest.raises(TelemetrySchemaError):  # counts must be edges+1 long
+        validate_line(bad)
+
+
+def test_stream_must_start_with_meta():
+    span = {"v": SCHEMA_VERSION, "kind": "span", "name": "s", "ts_us": 0.0,
+            "dur_us": 1.0, "tid": 1, "thread": "t"}
+    with pytest.raises(TelemetrySchemaError, match="meta"):
+        validate_stream([span])
+
+
+def test_window_config_validated():
+    with pytest.raises(ValueError, match="window"):
+        TelemetryConfig(window=0)
+
+
+# ---------------- zero-overhead contract ----------------
+
+def test_disabled_path_runs_no_telemetry_code():
+    before = activity_count()
+    ctx = maybe_span(None, "anything", step=3)
+    with ctx:
+        pass
+    assert maybe_span(None, "x") is ctx  # shared singleton, no allocation
+    assert activity_count() == before
+
+
+def test_enabled_spans_bump_activity():
+    tele = Telemetry(TelemetryConfig(jax_annotations=False))
+    before = activity_count()
+    with maybe_span(tele, "work"):
+        pass
+    assert activity_count() == before + 1
+    tele.close()
+
+
+# ---------------- spans across threads ----------------
+
+def test_span_balance_across_threads(tmp_path):
+    path = str(tmp_path / "spans.jsonl")
+    tele = Telemetry(TelemetryConfig(jsonl_path=path, jax_annotations=False))
+
+    def worker(i):
+        with tele.span("outer", step=i, dev=i):
+            with tele.span("inner", step=i):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(i,), name=f"w{i}")
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tele.open_spans == 0
+    assert tele.span_count == 8
+    tele.close()
+    lines = load_stream(path)
+    spans = [ln for ln in lines if ln["kind"] == "span"]
+    assert len(spans) == 8
+    # tids may be recycled across joined threads; names are unique here
+    assert {s["thread"] for s in spans} == {f"w{i}" for i in range(4)}
+    # per thread: spans are properly nested (disjoint or contained)
+    for name in {s["thread"] for s in spans}:
+        own = sorted((s for s in spans if s["thread"] == name),
+                     key=lambda s: s["ts_us"])
+        for a, b in zip(own, own[1:]):
+            a_end = a["ts_us"] + a["dur_us"]
+            contained = (b["ts_us"] >= a["ts_us"]
+                         and b["ts_us"] + b["dur_us"] <= a_end + 1e-6)
+            disjoint = b["ts_us"] >= a_end - 1e-6
+            assert contained or disjoint
+
+
+def test_dangling_span_reported_at_close(tmp_path):
+    path = str(tmp_path / "dangle.jsonl")
+    tele = Telemetry(TelemetryConfig(jsonl_path=path, jax_annotations=False))
+    span = tele.span("never_exits")
+    span.__enter__()
+    tele.close()
+    lines = load_stream(path)
+    events = [ln for ln in lines if ln["kind"] == "event"]
+    assert any(e["name"] == "dangling_spans" and e["attrs"]["count"] == 1
+               for e in events)
+
+
+# ---------------- trace sink ----------------
+
+def test_chrome_trace_sink_caps_span_events(tmp_path):
+    path = str(tmp_path / "trace.json")
+    sink = ChromeTraceSink(path, max_events=2)
+    for i in range(5):
+        sink.add_span("s", float(i), 1.0, 1, "main", i, {})
+    sink.add_counter("c", 0.0, 1.0)  # counters are not capped
+    sink.close()
+    trace = json.load(open(path))
+    names = [e["name"] for e in trace["traceEvents"]]
+    assert names.count("s") == 2
+    assert names.count("c") == 1
+
+
+# ---------------- end-to-end through train_gnn ----------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = powerlaw_graph(2000, 8, seed=3, feat_dim=16)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=400_000,
+                      batch_size=64, seed=0, fanouts=(4, 2))
+    return g, plan
+
+
+@pytest.fixture(scope="module")
+def run(tiny, tmp_path_factory):
+    g, plan = tiny
+    d = tmp_path_factory.mktemp("telem")
+    jsonl, trace = str(d / "run.jsonl"), str(d / "run.json")
+    cfg = GNNConfig(feat_dim=16, hidden=8, batch_size=64, fanouts=(4, 2))
+    counter = TrafficCounter.for_plan(plan)
+    tele = Telemetry(TelemetryConfig(jsonl_path=jsonl, trace_path=trace,
+                                     window=4, run="test"))
+    res = train_gnn(g, plan, cfg, steps=10, seed=0, counter=counter,
+                    telemetry=tele)
+    return res, counter, jsonl, trace
+
+
+def test_stream_validates_and_result_reports(run):
+    res, _, jsonl, trace = run
+    lines = load_stream(jsonl)  # validates every line against the schema
+    assert lines[0]["kind"] == "meta" and lines[0]["run"] == "test"
+    assert res.telemetry["jsonl_path"] == jsonl
+    assert res.telemetry["trace_path"] == trace
+    assert res.telemetry["open_spans"] == 0
+    assert res.telemetry["spans"] > 0
+
+
+def test_window_deltas_reconstruct_final_totals(run):
+    _, counter, jsonl, _ = run
+    snaps = [ln for ln in load_stream(jsonl) if ln["kind"] == "snapshot"]
+    assert len(snaps) >= 3  # 10 steps, window 4 -> 2 in-loop + 1 final
+    sums = sum_counter_deltas(snaps)
+    final = snaps[-1]["counters"]
+    for key, c in final.items():
+        assert sums[key] == c["total"], key
+    assert final["traffic.feature_requests"]["total"] \
+        == counter.feature_requests
+    assert final["traffic.pcie_transactions"]["total"] \
+        == counter.pcie_transactions
+    # per-pair byte deltas reconstruct the full bytes matrix
+    pair_sums = sum_counter_deltas(snaps, name="traffic.feat_bytes_pair{")
+    total_pair = sum(pair_sums.values())
+    assert total_pair == int(counter.bytes_matrix.sum())
+
+
+def test_trace_loads_in_perfetto_shape(run):
+    _, _, _, trace_path = run
+    trace = json.load(open(trace_path))
+    ev = trace["traceEvents"]
+    steps = [e for e in ev if e.get("ph") == "X"
+             and e.get("name") == "device_step"]
+    assert len(steps) == 10
+    assert all(e["dur"] >= 0 for e in steps)
+    assert any(e.get("ph") == "M" and e.get("name") == "thread_name"
+               for e in ev)
+    assert any(e.get("ph") == "C" for e in ev)  # counter tracks
+
+
+def test_telemetry_does_not_perturb_training(tiny):
+    g, plan = tiny
+    cfg = GNNConfig(feat_dim=16, hidden=8, batch_size=64, fanouts=(4, 2))
+    r0 = train_gnn(g, plan, cfg, steps=6, seed=0)
+    tele = Telemetry(TelemetryConfig(jax_annotations=False))
+    r1 = train_gnn(g, plan, cfg, steps=6, seed=0, telemetry=tele)
+    np.testing.assert_array_equal(r0.losses, r1.losses)
+    assert r0.telemetry == {}
+
+
+def test_result_telemetry_empty_when_disabled(tiny):
+    g, plan = tiny
+    cfg = GNNConfig(feat_dim=16, hidden=8, batch_size=64, fanouts=(4, 2))
+    before = activity_count()
+    res = train_gnn(g, plan, cfg, steps=4, seed=0)
+    assert res.telemetry == {}
+    assert activity_count() == before  # zero-overhead contract
+
+
+# ---------------- reporter CLI ----------------
+
+def test_reporter_digest_and_human_output(run, capsys):
+    _, counter, jsonl, _ = run
+    assert report_main([jsonl]) == 0
+    out = capsys.readouterr().out
+    assert "device steps" in out and "where the time went" in out
+    assert report_main([jsonl, "--json"]) == 0
+    d = json.loads(capsys.readouterr().out)
+    assert d["device_steps"] == 10
+    assert d["run"] == "test"
+    assert d["final_counters"]["traffic.feature_requests"] \
+        == counter.feature_requests
+    assert all(w["feat_hit_rate"] is None or 0 <= w["feat_hit_rate"] <= 1
+               for w in d["windows"])
+
+
+def test_reporter_rejects_corrupt_stream(tmp_path, capsys):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"v": 1, "kind": "meta", "run": "x", "window": 1, '
+                   '"t0_unix_s": 0.0, "pid": 1}\n{"not": "a line"}\n')
+    assert report_main([str(bad)]) == 1
+    assert "error:" in capsys.readouterr().err
+    missing = tmp_path / "missing.jsonl"
+    assert report_main([str(missing)]) == 1
+
+
+def test_digest_queue_dry_and_spans(run):
+    _, _, jsonl, _ = run
+    d = digest(load_stream(jsonl))
+    assert d["spans"]["device_step"]["count"] == 10
+    assert d["train_loop_s"] > 0
+    assert d["queue_dry_s"] >= 0

@@ -206,3 +206,36 @@ def test_constructor_validation():
         Prefetcher(lambda s: s, part_fns=[lambda s: s])
     with pytest.raises(ValueError, match="not be empty"):
         Prefetcher(part_fns=[])
+
+
+def test_extra_summary_collision_raises():
+    """Regression: an extra_summary key shadowing a build stat used to be
+    silently dict.update'd over it — now it raises with the clashing keys."""
+    p = Prefetcher(lambda step: {"step": step}, depth=1, limit=1,
+                   extra_summary=lambda: {"batches_built": 999,
+                                          "queue_dry_s_total": 0})
+    p.get()
+    p.close()
+    with pytest.raises(ValueError, match=r"batches_built.*queue_dry_s_total"):
+        p.summary()
+
+
+def test_extra_summary_namespaced_keys_merge():
+    p = Prefetcher(lambda step: {"step": step}, depth=1, limit=1,
+                   extra_summary=lambda: {"sampling/syncs": 7})
+    p.get()
+    p.close()
+    s = p.summary()
+    assert s["sampling/syncs"] == 7
+    assert s["batches_built"] == 1
+
+
+def test_summary_on_zero_batches():
+    """A run that never produced a batch must still summarize (no
+    ZeroDivisionError on the per-batch means)."""
+    p = Prefetcher(lambda step: {"step": step}, depth=1, limit=0)
+    p.close()
+    s = p.summary()
+    assert s["batches_built"] == 0
+    assert s["host_build_s_mean"] == 0
+    assert s["queue_dry_s_mean"] == 0
