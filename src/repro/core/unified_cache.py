@@ -777,16 +777,29 @@ class CliqueCache:
                           np.asarray(self.devices), row_bytes * cnt)
 
     def extract_features(self, ids: np.ndarray, requester_dev: int,
-                         counter: Optional[TrafficCounter] = None) -> np.ndarray:
+                         counter: Optional[TrafficCounter] = None,
+                         store=None, step: Optional[int] = None) -> np.ndarray:
         """Gather rows for `ids` (unique sampled vertices of one batch),
-        accounting hits (local/peer) and misses (CPU over PCIe)."""
+        accounting hits (local/peer) and misses (CPU over PCIe).
+
+        ``store`` routes the HBM misses through a tiered
+        :class:`~repro.core.feature_store.FeatureStore` (host-RAM cache
+        over an SSD-resident table) instead of the direct ``g.get_features``
+        host fill; ``step`` keys the store's lookahead/prefetch state.
+        Rows are bitwise identical either way — the store is an
+        accounting + placement layer, never a value transform."""
         ids = np.asarray(ids, dtype=np.int64)
         pos, hit = self.split_hits(ids)
         out = np.empty((len(ids), self.g.feat_dim), dtype=np.float32)
         if hit.any():
             out[hit] = self.feat_cache[pos[hit]]
         if (~hit).any():
-            out[~hit] = self.g.get_features(ids[~hit])
+            miss_ids = ids[~hit]
+            out[~hit] = (store.gather(miss_ids, step=step, dev=requester_dev)
+                         if store is not None
+                         else self.g.get_features(miss_ids))
+        if store is not None:
+            store.record_hbm(len(ids), int(hit.sum()))
         if counter is not None:
             self.account_feature_gather(pos, hit, requester_dev, counter)
         return out

@@ -1,10 +1,22 @@
 """Host-resident CSR graphs + synthetic generators + the paper's datasets.
 
-Graph topology and features live in host memory (the paper's CPU side; our
-TPU host).  Features for large graphs are *virtual*: rows are generated
-deterministically from the vertex id (hash-based), so billion-scale profiles
-never materialize — exactly what the cost model and cache planner need, while
-small graphs materialize real arrays for end-to-end training.
+Graph topology lives in host memory (the paper's CPU side; our TPU host).
+Feature rows come from one of three interchangeable sources, all bitwise
+identical for the same graph:
+
+* ``features`` — a materialized in-RAM ``(n, D)`` float32 array (small
+  graphs, the classic all-in-host-memory layout);
+* ``feature_file`` — an ``.npy`` file read through ``np.memmap`` (the SSD
+  tier of the tiered feature store: the table never has to fit in host
+  RAM, see ``repro.core.feature_store``);
+* *virtual* — neither set: rows are generated deterministically from the
+  vertex id (hash-based), so billion-scale profiles never materialize —
+  exactly what the cost model and cache planner need.
+
+``save_feature_file`` writes the current rows (whatever their source) to
+an ``.npy`` file in bounded-memory chunks, and ``detach_features`` drops
+the in-RAM array afterwards, so a graph can be flipped from RAM-resident
+to file-backed without ever holding two copies.
 """
 from __future__ import annotations
 
@@ -25,6 +37,13 @@ class CSRGraph:
     n_classes: int = 32
     features: Optional[np.ndarray] = None  # (n, D) f32, or None -> virtual
     seed: int = 0
+    # SSD-resident feature table: path to an .npy file of shape (n, feat_dim)
+    # float32, read via mmap.  Consulted only when ``features`` is None, so
+    # a materialized array always wins (same precedence as the docstring).
+    feature_file: Optional[str] = None
+    # lazy np.memmap handle for feature_file (opened on first read)
+    _feat_mmap: Optional[np.ndarray] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     @property
     def nnz(self) -> int:
@@ -38,12 +57,38 @@ class CSRGraph:
 
     label_signal: float = 0.5  # feature<->label correlation (learnability)
 
+    def _feature_mmap(self) -> np.ndarray:
+        """The memory-mapped feature_file table, opened (and validated
+        against this graph's shape/dtype) on first use.  Fancy indexing on
+        the returned memmap copies the touched rows out — reads are pure,
+        so concurrent readers (the store's async fill worker and the
+        prefetch pool) need no lock."""
+        if self._feat_mmap is None:
+            mm = np.load(self.feature_file, mmap_mode="r")
+            if mm.dtype != np.float32 or mm.shape != (self.n, self.feat_dim):
+                raise ValueError(
+                    f"feature_file {self.feature_file!r} holds "
+                    f"{mm.dtype} array of shape {mm.shape}; this graph "
+                    f"needs float32 ({self.n}, {self.feat_dim})")
+            self._feat_mmap = mm
+        return self._feat_mmap
+
     def get_features(self, ids: np.ndarray) -> np.ndarray:
         """Feature rows for ids; virtual rows are hash-generated on the fly.
         Rows carry a label-dependent offset in the first n_classes dims so
-        node classification is learnable (convergence experiments)."""
+        node classification is learnable (convergence experiments).
+
+        Source precedence: in-RAM ``features`` array, then the mmap'd
+        ``feature_file``, then the virtual hash — all three produce
+        bitwise-identical rows for a file written by ``save_feature_file``
+        (pinned by ``tests/test_feature_store.py``)."""
         if self.features is not None:
             return self.features[ids]
+        if self.feature_file is not None:
+            ids = np.asarray(ids, dtype=np.int64)
+            # fancy indexing on a memmap materializes a fresh in-RAM copy
+            # of exactly the requested rows (the mmap "read")
+            return np.asarray(self._feature_mmap()[ids], dtype=np.float32)
         ids = np.asarray(ids, dtype=np.int64)
         base = ids[:, None] * np.int64(self.feat_dim) + np.arange(self.feat_dim)
         h = stable_hash_u32(base, salt=self.seed)
@@ -67,6 +112,58 @@ class CSRGraph:
 
     def feature_bytes_per_vertex(self, s_float32: int = 4) -> int:
         return self.feat_dim * s_float32
+
+    # ---- file-backed feature source (the tiered store's SSD tier) ----
+    def save_feature_file(self, path: str, chunk_rows: int = 65536) -> str:
+        """Write this graph's feature rows — from whichever source is
+        active — to ``path`` as a standard ``.npy`` file, ``chunk_rows``
+        at a time so peak memory stays bounded regardless of ``n``.  The
+        written rows are the exact float32 values ``get_features`` returns
+        today, so flipping the graph to ``feature_file=path`` afterwards
+        is bitwise-invisible to training.  Returns ``path``."""
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+        out = np.lib.format.open_memmap(
+            path, mode="w+", dtype=np.float32, shape=(self.n, self.feat_dim))
+        for a in range(0, self.n, chunk_rows):
+            b = min(a + chunk_rows, self.n)
+            out[a:b] = self.get_features(np.arange(a, b, dtype=np.int64))
+        out.flush()
+        del out
+        return path
+
+    def detach_features(self, path: Optional[str] = None) -> "CSRGraph":
+        """Drop the in-RAM feature array, leaving the graph file-backed
+        (``path`` saves first when given) or virtual.  After this,
+        ``features`` is None — the layout the tiered feature store's SSD
+        tier trains from.  Returns ``self`` for chaining."""
+        if path is not None:
+            self.save_feature_file(path)
+            self.feature_file = path
+            self._feat_mmap = None
+        if self.features is not None and self.feature_file is None \
+                and not self._is_virtual_consistent():
+            raise ValueError(
+                "detach_features without a feature_file would fall back to "
+                "virtual hash rows that differ from the materialized array; "
+                "pass path= to save the rows first")
+        self.features = None
+        return self
+
+    def _is_virtual_consistent(self) -> bool:
+        """Whether the materialized array matches the virtual generator
+        (true for materialize_features=True synthetic graphs, false for
+        externally-loaded feature tables)."""
+        if self.features is None or self.n == 0:
+            return True
+        probe = np.unique(np.linspace(0, self.n - 1, num=min(self.n, 8),
+                                      dtype=np.int64))
+        saved, self.features = self.features, None
+        try:
+            virtual = self.get_features(probe)
+        finally:
+            self.features = saved
+        return bool(np.array_equal(self.features[probe], virtual))
 
 
 def powerlaw_graph(n: int, avg_degree: int, alpha: float = 0.8, seed: int = 0,

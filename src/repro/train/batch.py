@@ -123,10 +123,13 @@ class _StagingPool:
     The device spec stages its miss rows into one of these instead of
     allocating a fresh array per batch — the CPU-pipeline analogue of a
     pinned H2D staging area.  ``acquire`` hands out a zeroed-tail buffer;
-    the consumer releases it *after* copying to device (``jnp.array`` is a
-    guaranteed copy — on the CPU backend ``jnp.asarray`` may alias the
-    numpy memory, which would corrupt the in-flight batch on reuse).
-    Thread-safe: build runs on prefetch workers, release on the consumer.
+    the consumer releases it only after the device copy *completed*:
+    ``jnp.array`` copies but dispatches asynchronously, so the release
+    site must ``block_until_ready()`` on the transferred array first — a
+    buffer recycled mid-transfer feeds the in-flight batch rows from the
+    *next* batch (a rare, timing-dependent corruption that presents as
+    nondeterministic losses).  Thread-safe: build runs on prefetch
+    workers, release on the consumer.
     """
 
     def __init__(self):
@@ -212,11 +215,54 @@ class BatchBuilder:
         # finalize/H2D-staging spans when set, a shared no-op context when
         # None — never perturbs batches or accounting
         self.telemetry = None
+        # tiered feature store (core.feature_store.FeatureStore), attached
+        # by the train loop: when set, HBM-miss fills route through its
+        # host-RAM/SSD tiers instead of a direct g.get_features host read.
+        # Rows are bitwise identical either way.
+        self.store = None
 
     # -- phase 1: host thread --------------------------------------------
+    # Split into two sub-phases so the pipeline can sample *ahead* of the
+    # feature fill (the store's lookahead window):
+    #   sample_spec()  draws this step's randomness and samples the batch
+    #                  (all RNG consumption happens here, in step order —
+    #                  the bitwise-determinism anchor);
+    #   fill_spec()    splits against the HBM cache at the *current* epoch
+    #                  and fetches the miss rows (RNG-free, so deferring it
+    #                  behind k more sample_spec calls changes nothing).
+    # build_spec() composes the two back to back (the classic path).
+    def sample_spec(self, seeds: np.ndarray,
+                    rng: np.random.Generator) -> BatchSpec:
+        raise NotImplementedError
+
+    def fill_spec(self, spec: BatchSpec,
+                  step: Optional[int] = None) -> BatchSpec:
+        raise NotImplementedError
+
+    def store_request_ids(self, spec: BatchSpec) -> np.ndarray:
+        """The ids ``fill_spec`` will request from the tiered store — the
+        sampled uniques minus the *current* HBM-resident set.  Read-only
+        (no accounting, no epoch pin): it feeds the store's lookahead
+        announce/prefetch hints, which stay hints — an online refresh
+        between announce and fill only degrades eviction quality, never
+        correctness."""
+        ids = spec.ids[:spec.n_ids]
+        if self.cache is None or len(self.cache.feat_ids) == 0:
+            return ids
+        _, hit = self.cache.split_hits(ids)
+        return ids[~hit]
+
     def build_spec(self, seeds: np.ndarray,
                    rng: np.random.Generator) -> BatchSpec:
-        raise NotImplementedError
+        return self.fill_spec(self.sample_spec(seeds, rng))
+
+    def _store_fill(self, ids: np.ndarray,
+                    step: Optional[int]) -> np.ndarray:
+        """Cache-less miss fetch: through the store when attached (its
+        host-RAM/SSD tiers), else straight off the graph."""
+        if self.store is not None:
+            return self.store.gather(ids, step=step, dev=self.dev)
+        return self.g.get_features(ids)
 
     # -- phase 2: consumer thread ----------------------------------------
     def finalize(self, spec: BatchSpec) -> Dict[str, "object"]:
@@ -246,7 +292,7 @@ class HostBatchBuilder(BatchBuilder):
 
     backend = "host"
 
-    def build_spec(self, seeds, rng):
+    def sample_spec(self, seeds, rng):
         levels = host_sample_batch(self.g, seeds, self.fanouts, rng)
         if self.counter is not None:
             # every host build samples from the host CSR by construction
@@ -254,11 +300,17 @@ class HostBatchBuilder(BatchBuilder):
                 self.counter.host_sample_syncs += 1
         self._account_sampling(levels)
         ids = unique_vertices(levels)
-        feats = (self.cache.extract_features(ids, self.dev, self.counter)
-                 if self.cache is not None else self.g.get_features(ids))
         return BatchSpec(labels=self.g.get_labels(seeds), levels=levels,
                          ids=ids, level_pos=_level_positions(ids, levels),
-                         host_feats=feats, n_ids=len(ids))
+                         n_ids=len(ids))
+
+    def fill_spec(self, spec, step=None):
+        ids = spec.ids
+        spec.host_feats = (
+            self.cache.extract_features(ids, self.dev, self.counter,
+                                        store=self.store, step=step)
+            if self.cache is not None else self._store_fill(ids, step))
+        return spec
 
     @staticmethod
     def assemble(spec: BatchSpec) -> Dict[str, np.ndarray]:
@@ -330,7 +382,7 @@ class DeviceBatchBuilder(BatchBuilder):
         feat_dim stay zero for the buffer's lifetime)."""
         return CliqueCache._lane_padded(self.g.feat_dim)
 
-    def build_spec(self, seeds, rng):
+    def sample_spec(self, seeds, rng):
         if self.sampler == "chain":
             # dispatch the whole device chain, then fetch labels while it
             # is in flight; resolve() pays the single sync and repairs
@@ -346,12 +398,22 @@ class DeviceBatchBuilder(BatchBuilder):
             labels = self.g.get_labels(seeds)
         self._account_sampling(levels)
         ids = unique_vertices(levels)
+        return BatchSpec(labels=labels, levels=levels, ids=ids,
+                         level_pos=_level_positions(ids, levels),
+                         n_ids=len(ids))
+
+    def fill_spec(self, spec, step=None):
+        # the hit/miss split runs HERE — at build time, after any refresh
+        # hook the step barrier serialized before it — so the spec pins the
+        # *current* cache epoch regardless of how far ahead it was sampled
+        ids, n_ids = spec.ids, spec.n_ids
         cache_pos, hit = self.cache.split_hits(ids)
         if self.counter is not None:
             self.cache.account_feature_gather(cache_pos, hit, self.dev,
                                               self.counter)
-        n_ids, n_miss = len(ids), int((~hit).sum())
-        level_pos = _level_positions(ids, levels)
+        if self.store is not None:
+            self.store.record_hbm(n_ids, int(hit.sum()))
+        n_miss = int((~hit).sum())
         # bucket-rounded layout: pad rows are inert (-1 / False) and never
         # referenced by level_pos, so every downstream shape is stable
         n_pad = _round_bucket(n_ids, self.bucket)
@@ -367,13 +429,19 @@ class DeviceBatchBuilder(BatchBuilder):
         staging = self._staging.acquire(m_pad, self._staging_width())
         D = self.g.feat_dim
         if n_miss:
-            staging[:n_miss, :D] = self.g.get_features(ids[~hit])
+            miss_ids = ids[~hit]
+            staging[:n_miss, :D] = (
+                self.store.gather(miss_ids, step=step, dev=self.dev)
+                if self.store is not None else self.g.get_features(miss_ids))
         staging[n_miss:, :D] = 0.0
-        return BatchSpec(labels=labels, levels=levels,
-                         ids=ids_p, level_pos=level_pos,
-                         cache_pos=pos_p, hit=hit_p, miss_feats=staging,
-                         miss_inv=miss_inv, n_ids=n_ids, n_miss=n_miss,
-                         cache_epoch=self.cache.epoch)
+        spec.ids = ids_p
+        spec.cache_pos = pos_p
+        spec.hit = hit_p
+        spec.miss_feats = staging
+        spec.miss_inv = miss_inv
+        spec.n_miss = n_miss
+        spec.cache_epoch = self.cache.epoch
+        return spec
 
     def release_spec(self, spec):
         self._staging.release(spec.miss_feats)
@@ -396,11 +464,13 @@ class DeviceBatchBuilder(BatchBuilder):
         tele = self.telemetry
         with maybe_span(tele, "finalize", dev=self.dev):
             table = self._table(spec.cache_epoch)
-            # jnp.array = guaranteed copy: the staging buffer goes back to
-            # the pool right here, while the batch it fed is still in flight
+            # jnp.array copies, but the copy is DISPATCHED, not done: the
+            # transfer must complete before the staging buffer goes back to
+            # the pool, or the next fill overwrites it mid-read
             with maybe_span(tele, "h2d_staging", dev=self.dev,
                             rows=spec.n_miss):
                 miss = jnp.array(spec.miss_feats)
+                miss.block_until_ready()
             self.release_spec(spec)
             idx = spec.cache_pos.astype(np.int32)  # -1 at miss AND pad rows
             pos = tuple(np.ascontiguousarray(p.reshape(-1).astype(np.int32))
@@ -438,8 +508,9 @@ class DeviceBatchBuilder(BatchBuilder):
         feats = self._gather_cached(idx, spec.cache_epoch)
         miss_rows = np.flatnonzero(spec.miss_inv[:n] >= 0)
         if len(miss_rows):
-            feats = feats.at[jnp.asarray(miss_rows)].set(
-                jnp.array(spec.miss_feats[:spec.n_miss, :D]))
+            miss = jnp.array(spec.miss_feats[:spec.n_miss, :D])
+            miss.block_until_ready()  # staging must not be reused mid-copy
+            feats = feats.at[jnp.asarray(miss_rows)].set(miss)
         self.release_spec(spec)
         batch = {"labels": jnp.asarray(spec.labels)}
         for li, (lvl, pos) in enumerate(zip(spec.levels, spec.level_pos)):
@@ -494,8 +565,8 @@ class ShardedBatchBuilder(DeviceBatchBuilder):
             self._routing_epoch = ep
         return self._routing
 
-    def build_spec(self, seeds, rng):
-        spec = super().build_spec(seeds, rng)
+    def fill_spec(self, spec, step=None):
+        spec = super().fill_spec(spec, step=step)
         owner, local = self._routing_for_epoch()
         if len(owner) == 0:  # empty feature cache: every id is a host fill
             spec.owner = np.full(len(spec.ids), -1, dtype=np.int32)

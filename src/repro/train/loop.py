@@ -36,7 +36,7 @@ from repro.train.batch import (HostBatchBuilder, make_batch_builder,
                                pack_sharded_specs)
 from repro.train.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
 from repro.train.optimizer import adamw, apply_updates
-from repro.train.pipeline import Prefetcher, StragglerMonitor
+from repro.train.pipeline import LookaheadWindow, Prefetcher, StragglerMonitor
 
 
 def make_gnn_batch(g: CSRGraph, cache, cfg: GNNConfig, seeds: np.ndarray,
@@ -141,6 +141,9 @@ class GNNTrainResult:
     # telemetry digest (repro.obs): sink paths + span/snapshot counts when
     # train_gnn ran with telemetry, {} otherwise
     telemetry: dict = dataclasses.field(default_factory=dict)
+    # tiered feature store digest (FeatureStore.summary()): per-tier
+    # hit/fill/eviction tallies when train_gnn ran with one, {} otherwise
+    store: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -154,7 +157,9 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               gather: str = "auto", fused: bool = True,
               bucket: int = 256, sampler: str = "chain",
               refresh_interval: Optional[int] = None,
-              refresh_config=None, telemetry=None) -> GNNTrainResult:
+              refresh_config=None, telemetry=None,
+              feature_store=None,
+              lookahead: Optional[int] = None) -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
     tablets and draws seeds from the full training set (the Fig. 11 baseline).
 
@@ -204,6 +209,20 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     ``telemetry=None`` (default) is the hard zero-overhead path: no
     telemetry code runs and results are bit-identical to pre-telemetry
     builds.
+
+    ``feature_store`` (a ``repro.core.feature_store.FeatureStore``, or a
+    ``TieredStoreConfig`` to build one over ``g``) routes every HBM-miss
+    feature fill through the tiered store's host-RAM/SSD tiers instead of
+    a direct host-array read — the layout that trains graphs whose feature
+    table exceeds host RAM (``g.feature_file`` set, ``g.features`` absent).
+    ``lookahead`` sets how many batches each device samples ahead of its
+    feature fill (default: the store config's ``lookahead``): the future
+    batches' store-request sets feed the store's next-use eviction index
+    and their SSD reads prefetch on the store's I/O pool.  Sampling stays
+    in strict step order (the whole per-step RNG draw moves earlier in
+    wall time, never reorders), so batches — and losses — are bitwise
+    identical to the storeless run.  ``lookahead=0`` disables sampling
+    ahead but keeps store routing.
 
     With ``mesh`` (a jax Mesh with a "data" axis) the step runs as explicit
     shard_map data parallelism; ``compress_grads=True`` additionally swaps
@@ -319,6 +338,20 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                 "buffer retains one epoch, so queued specs older than one "
                 "refresh would gather from a released buffer")
         manager = OnlineCacheManager(g, plan, rc, counter=counter)
+
+    store = feature_store
+    if store is not None and not hasattr(store, "gather"):
+        # a TieredStoreConfig (or anything config-shaped): build the
+        # FeatureStore over the graph here so callers can pass plain knobs
+        from repro.core.feature_store import FeatureStore
+
+        store = FeatureStore(g, store, counter=counter)
+    if lookahead is not None and store is None:
+        raise ValueError("lookahead= needs a feature_store to feed "
+                         "(announce/prefetch hints go to the store)")
+    window = (lookahead if lookahead is not None
+              else (store.config.lookahead if store is not None else 0))
+
     builders = {}
     for d in devices:
         cache = plan.cache_for_device(d) if plan is not None else None
@@ -330,6 +363,7 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
                                          counter, d, **kw)
         builders[d].telemetry = tele
+        builders[d].store = store
 
     sharded_step = None
     clique_caches = None
@@ -375,18 +409,33 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         the serial build order."""
         rng, tablet, builder = rngs[d], streams[d], builders[d]
 
-        if tele is None:
-            def spec_fn(step: int):
+        if store is not None:
+            # sample-ahead mode: the window pre-samples up to ``window``
+            # future steps (strict step order — same RNG sequence as the
+            # plain path), announces their store-request sets and issues
+            # their SSD prefetches, then fills the front spec
+            def sample_one(step: int, rng=rng, tablet=tablet,
+                           builder=builder):
+                seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
+                return builder.sample_spec(seeds, rng)
+
+            win = LookaheadWindow(builder, store, sample_one,
+                                  window=window,
+                                  limit=max(steps - step0, 0), dev=d)
+            build = win.build
+        else:
+            def build(step: int, rng=rng, tablet=tablet, builder=builder):
                 seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
                 return builder.build_spec(seeds, rng)
-        else:
-            def spec_fn(step: int):
-                # runs on a prefetch worker thread: the span is what makes
-                # the build pool's concurrency visible in the trace
-                with tele.span("spec_build", step=step, dev=d):
-                    seeds = tablet[rng.integers(0, len(tablet),
-                                                size=per_dev)]
-                    return builder.build_spec(seeds, rng)
+
+        if tele is None:
+            return build
+
+        def spec_fn(step: int):
+            # runs on a prefetch worker thread: the span is what makes
+            # the build pool's concurrency visible in the trace
+            with tele.span("spec_build", step=step, dev=d):
+                return build(step)
         return spec_fn
 
     def finalize_batch(item):
@@ -439,6 +488,8 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         # mirror their own tallies, nothing extra runs on hot paths
         tele.add_source("traffic", counter.publish_metrics)
         tele.add_source("prefetch", prefetcher.publish_metrics)
+        if store is not None:
+            tele.add_source("store", store.publish_metrics)
         if manager is not None:
             tele.add_source("refresh", manager.publish_metrics)
         if plan is not None:
@@ -506,6 +557,11 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
             prefetcher.close()
         finally:
             try:
+                if store is not None:
+                    # drain the store's I/O pool (before the final
+                    # telemetry snapshot so its read/stall totals are
+                    # complete); the store itself stays usable
+                    store.close()
                 if tele is not None:
                     tele.close(final_step=steps)
             finally:
@@ -524,4 +580,6 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                               "trace_path": tele.config.trace_path,
                               "spans": tele.span_count,
                               "open_spans": tele.open_spans,
-                              "window": tele.config.window}))
+                              "window": tele.config.window}),
+                          store=(store.summary() if store is not None
+                                 else {}))

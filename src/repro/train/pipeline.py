@@ -24,6 +24,11 @@
   time — how long ``get()`` sat waiting on an empty queue, i.e. the time
   the device would have stalled for host work (the quantity the
   ``pipeline_stall`` benchmark attributes wins to).
+* ``LookaheadWindow``: the sample-ahead driver behind the tiered feature
+  store's Ginex-style eviction — decouples a builder's sampling sub-phase
+  from its feature fill so batch ``N``'s fill runs with batches
+  ``N+1..N+W`` already sampled, their store-request sets announced (the
+  next-use index eviction reads) and their SSD reads prefetching.
 * ``StragglerMonitor``: EWMA step-time tracker flagging outlier steps; at
   fleet scale its per-host summaries feed backup-task dispatch — here it
   drives logging and the queue-depth guard.
@@ -34,6 +39,7 @@ import os
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor, wait
 from typing import Callable, List, Optional
 
@@ -291,6 +297,60 @@ class Prefetcher:
         if self._exc is not None and not self._exc_raised:
             self._exc_raised = True
             raise self._exc
+
+
+class LookaheadWindow:
+    """One device's sample-ahead window over a split batch builder.
+
+    ``build(step)`` is a drop-in replacement for
+    ``builder.build_spec(...)`` inside a Prefetcher part function, except
+    that before filling step ``N`` it tops the window up through step
+    ``N+window``: each future step is *sampled* (``sample_fn(step)`` —
+    the per-step seed draw plus ``builder.sample_spec``, i.e. ALL of that
+    step's RNG consumption, still executed strictly in step order, so
+    batches stay bitwise identical to the unwindowed pipeline), its
+    store-request set is announced to the tiered store (feeding the
+    next-use index the lookahead eviction policy reads) and its SSD read
+    is prefetched onto the store's I/O pool.  Only then does the front
+    spec get its RNG-free ``fill_spec`` — with ``window`` batches of
+    future knowledge banked.
+
+    ``limit`` caps sampling at the run's step count so the window never
+    draws (or accounts) steps nobody will consume — totals stay identical
+    to the unwindowed run.  One window per device part-fn: the Prefetcher
+    pool may run devices concurrently, but each window instance is only
+    ever driven by its own device's strictly-sequential steps."""
+
+    def __init__(self, builder, store, sample_fn: Callable[[int], object],
+                 window: int = 4, limit: Optional[int] = None, dev: int = 0):
+        if window < 0:
+            raise ValueError(f"window must be >= 0, got {window}")
+        self.builder = builder
+        self.store = store
+        self.sample_fn = sample_fn
+        self.window = int(window)
+        self.limit = limit
+        self.dev = dev
+        self._pending: deque = deque()  # (step, sampled spec) in step order
+        self._next = 0  # next step to sample
+
+    def build(self, step: int):
+        while (self._next <= step + self.window
+               and (self.limit is None or self._next < self.limit)):
+            s = self._next
+            spec = self.sample_fn(s)
+            ids = self.builder.store_request_ids(spec)
+            self.store.announce(s, ids)
+            self.store.prefetch(s, ids, dev=self.dev)
+            self._pending.append((s, spec))
+            self._next += 1
+        got, spec = self._pending.popleft()
+        if got != step:
+            raise RuntimeError(
+                f"LookaheadWindow fed out of order: asked for step {step}, "
+                f"front of window is {got} (one window per device; steps "
+                "must arrive sequentially)")
+        return self.builder.fill_spec(spec, step=step)
 
 
 class StragglerMonitor:

@@ -1,0 +1,143 @@
+"""Docs checker: relative links resolve, runnable snippets run.
+
+Two checks over ``README.md`` + ``docs/*.md``:
+
+1. **Links** — every relative markdown link/image target must exist on
+   disk (resolved against the file that contains it; ``#anchor``
+   fragments are stripped, external schemes are skipped).
+2. **Snippets** — every fenced ```` ```python ```` block is executed in
+   a subprocess with ``PYTHONPATH=src`` from a throwaway cwd, so doc
+   examples are forced to stay correct.  Fences with any other (or no)
+   language tag are skipped.
+
+Exit 0 iff everything passes.  Run from anywhere:
+
+    python tools/check_docs.py [--skip-snippets]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); target up to first ')' or whitespace
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\S*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_links(path: str) -> list[str]:
+    """Return error strings for relative link targets that don't exist."""
+    errors = []
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    # ignore targets inside code fences (CSV rows etc. can look like links)
+    stripped, fenced = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            fenced = not fenced
+            continue
+        if not fenced:
+            stripped.append(line)
+    for target in _LINK_RE.findall("\n".join(stripped)):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, ROOT)}: broken link -> {target}")
+    return errors
+
+
+def python_blocks(path: str) -> list[tuple[int, str]]:
+    """(start_line, code) for every ```python fence in the file."""
+    blocks, lang, buf, start = [], None, [], 0
+    with open(path, encoding="utf-8") as fh:
+        for i, line in enumerate(fh, 1):
+            m = _FENCE_RE.match(line)
+            if m and lang is None:
+                lang, buf, start = m.group(1), [], i
+            elif m:
+                if lang == "python":
+                    blocks.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+def run_snippet(code: str, cwd: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    extra = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + extra if extra else "")
+    return subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=cwd,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--skip-snippets",
+        action="store_true",
+        help="only check links (fast)",
+    )
+    args = ap.parse_args(argv)
+
+    files = doc_files()
+    failures: list[str] = []
+
+    for path in files:
+        failures += check_links(path)
+    print(f"links: checked {len(files)} files, {len(failures)} broken")
+
+    if not args.skip_snippets:
+        for path in files:
+            rel = os.path.relpath(path, ROOT)
+            for lineno, code in python_blocks(path):
+                with tempfile.TemporaryDirectory() as tmp:
+                    proc = run_snippet(code, cwd=tmp)
+                if proc.returncode != 0:
+                    tail = proc.stderr.strip().splitlines()[-12:]
+                    failures.append(
+                        f"{rel}:{lineno}: snippet failed "
+                        f"(exit {proc.returncode})\n  " + "\n  ".join(tail)
+                    )
+                    status = "FAIL"
+                else:
+                    status = "ok"
+                print(f"snippet {rel}:{lineno} ... {status}")
+
+    if failures:
+        print("\n--- failures ---")
+        for f in failures:
+            print(f)
+        return 1
+    print("docs check: all good")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
