@@ -424,12 +424,6 @@ def bench_pipeline_stall() -> List[tuple]:
                     lr=3e-3)
     _ensure_compile_listener()
 
-    # dodge the cold-start XLA-CPU flake (see ROADMAP "Maintenance"): the
-    # first device-backend train in a fresh process can drift a few ulp,
-    # and every arm below is bitwise parity-gated — one tiny throwaway
-    # warm-up run first, the same mitigation as topology_scaling.py
-    train_gnn(g, plan, cfg, steps=2, seed=0, backend="device", gather="xla")
-
     jsonl_path, trace_path = common.telemetry_paths("pipeline")
     arms = [("before", dict(fused=False, sampler="stepwise",
                             prefetch_workers=1)),
@@ -694,6 +688,20 @@ def bench_tiered_store() -> List[tuple]:
     return run_tiered(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
 
 
+def bench_resilience() -> List[tuple]:
+    """Beyond-paper: chaos bench for the fault-tolerance layer — injected
+    prefetch-worker deaths, transient SSD read errors/stalls and a
+    checkpoint-write failure recovered bitwise against a fault-free
+    oracle; a kill-at-step-k run resumed from checkpoint stitching
+    bitwise; a simulated device loss re-meshed onto the survivors with
+    fault.*/recovery.* telemetry counters telescoping exactly.
+    Structured results land in BENCH_resilience.json.  See
+    benchmarks/resilience.py."""
+    from benchmarks.resilience import run_resilience
+
+    return run_resilience(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -713,4 +721,5 @@ ALL_BENCHES = [
     ("hierarchy_scaling", bench_hierarchy_scaling),
     ("topology_scaling", bench_topology_scaling),
     ("tiered_store", bench_tiered_store),
+    ("resilience", bench_resilience),
 ]

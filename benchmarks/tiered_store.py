@@ -111,16 +111,6 @@ def run_tiered(smoke: bool = False, json_dir: str = None) -> List[tuple]:
                         fanouts=(5, 3), lr=3e-3)
         return plan, cfg
 
-    # dodge the cold-start XLA-CPU flake (see ROADMAP "Maintenance"): the
-    # first device-backend train of a given shape set in a fresh process
-    # can drift a few ulp, and every arm below is bitwise loss-gated — one
-    # short throwaway run at the arms' EXACT graph/plan/config shapes
-    # first, the same mitigation as pipeline_stall
-    g_warm = make_graph(True)
-    plan_w, cfg_w = build(g_warm)
-    train_gnn(g_warm, plan_w, cfg_w, steps=2, seed=0, backend="device",
-              gather="xla")
-
     jsonl_path, trace_path = common.telemetry_paths("tiered")
     arms = [("ram", "ram", None),
             ("ssd_lookahead", "ssd", "lookahead"),

@@ -60,32 +60,12 @@ def _params(smoke: bool):
     return dict(n=40_000, deg=16, feat=64, steps=30, batch=512)
 
 
-def _warmup() -> None:
-    """Tiny throwaway device-backend train to absorb the cold-start
-    XLA-CPU compile nondeterminism (see ROADMAP: the first jitted train
-    step in a fresh process occasionally rounds differently).  Every
-    worker runs this before its measured train so the cross-process
-    bitwise loss gate compares warm, deterministic trajectories."""
-    from repro.core.cliques import topology_matrix
-    from repro.core.planner import build_plan
-    from repro.graph.csr import powerlaw_graph
-    from repro.models.gnn import GNNConfig
-    from repro.train.loop import train_gnn
-
-    g = powerlaw_graph(500, 6, seed=0, feat_dim=8)
-    plan = build_plan(g, topology_matrix("nv2", 2), mem_per_device=50_000,
-                      batch_size=64, seed=0, fanouts=(2, 2))
-    cfg = GNNConfig(feat_dim=8, hidden=8, batch_size=16, fanouts=(2, 2))
-    train_gnn(g, plan, cfg, steps=2, seed=0, backend="device")
-
-
 def _setup(smoke: bool, mode: str):
     from repro.core.cliques import topology_matrix
     from repro.core.planner import build_plan
     from repro.graph.csr import powerlaw_graph
     from repro.models.gnn import GNNConfig
 
-    _warmup()
     p = _params(smoke)
     g = powerlaw_graph(p["n"], p["deg"], seed=0, feat_dim=p["feat"])
     mem = 0.15 * g.n * g.feat_dim * 4

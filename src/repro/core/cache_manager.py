@@ -205,6 +205,23 @@ class OnlineCacheManager:
         if overlap >= self.config.drift_threshold or k == 0:
             return False
 
+        info, topo_rebuilt = self._replan_and_apply(ci, blended)
+        self.stats.refreshes += 1
+        self.stats.admitted += info["admitted"]
+        self.stats.evicted += info["evicted"]
+        self.stats.topo_rebuilds += int(topo_rebuilt)
+        self.stats.refresh_bytes_h2d += info["bytes_h2d"]
+        self.stats.events.append(
+            {"step": step, "clique": ci, "overlap": overlap,
+             "admitted": info["admitted"], "evicted": info["evicted"],
+             "topo_rebuilt": topo_rebuilt})
+        return True
+
+    def _replan_and_apply(self, ci: int, blended: HotnessStats):
+        """Delta-replan one clique from ``blended`` hotness and apply the
+        admissions/evictions in place (the shared tail of an online
+        refresh and a checkpoint-restore hot-set recovery).  Updates the
+        plan's cslp/cost/stats view; returns ``(info, topo_rebuilt)``."""
         res, cost_plan, feat_tgt, topo_tgt = replan_cache_from_hotness(
             self.g, self.plan, ci, blended, planner=self.config.planner)
         info = self._apply_feature_delta(ci, blended, feat_tgt)
@@ -216,16 +233,7 @@ class OnlineCacheManager:
         self.plan.cost_plans[ci] = cost_plan
         self.plan.stats[ci] = blended
         self._planned_hot[ci] = np.asarray(blended.A_F, dtype=np.float64)
-        self.stats.refreshes += 1
-        self.stats.admitted += info["admitted"]
-        self.stats.evicted += info["evicted"]
-        self.stats.topo_rebuilds += int(topo_rebuilt)
-        self.stats.refresh_bytes_h2d += info["bytes_h2d"]
-        self.stats.events.append(
-            {"step": step, "clique": ci, "overlap": overlap,
-             "admitted": info["admitted"], "evicted": info["evicted"],
-             "topo_rebuilt": topo_rebuilt})
-        return True
+        return info, topo_rebuilt
 
     # ---- delta application ----
     def _apply_feature_delta(self, ci: int, blended: HotnessStats,
@@ -278,19 +286,90 @@ class OnlineCacheManager:
         cache.replace_topology(topo_tgt)
         return True
 
+    # ---- preemption-safe resume ----
+    def state_dict(self) -> dict:
+        """The learned view of the workload, checkpointable: per-clique
+        EWMA-blended hotness, the planned hot set it was compared
+        against, the mid-window access accumulators, and the refresh
+        tallies.  This is exactly what a preempted job loses today — the
+        hot set the manager spent the whole run learning."""
+        return {
+            "version": 1,
+            "cliques": [list(map(int, c))
+                        for c in self.plan.partition.cliques],
+            "blended": [{"H_T": np.asarray(st.H_T).copy(),
+                         "H_F": np.asarray(st.H_F).copy(),
+                         "N_TSUM": int(st.N_TSUM)}
+                        for st in self._blended],
+            "planned_hot": [p.copy() for p in self._planned_hot],
+            "obs": [{"H_T": o.H_T.copy(), "H_F": o.H_F.copy(),
+                     "tsum": int(o.tsum), "batches": int(o.batches)}
+                    for o in self._obs],
+            "stats": self.stats.summary(),
+        }
+
+    def load_state_dict(self, state: dict, reapply: bool = True) -> int:
+        """Restore a ``state_dict`` capture into this manager (same graph
+        and clique layout).  With ``reapply=True`` each clique's cache is
+        immediately delta-replanned from the restored blended hotness —
+        the restored job *recovers its learned hot set* in one admission
+        pass instead of re-warming it over thousands of steps.  Returns
+        the number of cliques whose residency actually changed."""
+        want = [list(map(int, c)) for c in self.plan.partition.cliques]
+        if state["cliques"] != want:
+            raise ValueError(
+                f"manager state was captured for cliques {state['cliques']}"
+                f", this plan has {want} — replan before restoring")
+        self._blended = [HotnessStats(H_T=np.asarray(b["H_T"]),
+                                      H_F=np.asarray(b["H_F"]),
+                                      N_TSUM=int(b["N_TSUM"]))
+                         for b in state["blended"]]
+        self._planned_hot = [np.asarray(p, dtype=np.float64)
+                             for p in state["planned_hot"]]
+        for o, rec in zip(self._obs, state["obs"]):
+            o.H_T[:] = rec["H_T"]
+            o.H_F[:] = rec["H_F"]
+            o.tsum = int(rec["tsum"])
+            o.batches = int(rec["batches"])
+        st = state.get("stats", {})
+        self.stats = RefreshStats(
+            checks=st.get("checks", 0), refreshes=st.get("refreshes", 0),
+            admitted=st.get("admitted", 0), evicted=st.get("evicted", 0),
+            topo_rebuilds=st.get("topo_rebuilds", 0),
+            refresh_bytes_h2d=st.get("refresh_bytes_h2d", 0),
+            last_overlap=st.get("last_overlap", 1.0),
+            events=list(st.get("events", [])))
+        changed = 0
+        if reapply:
+            for ci in range(len(want)):
+                info, topo_rebuilt = self._replan_and_apply(
+                    ci, self._blended[ci])
+                if info["admitted"] or info["evicted"] or topo_rebuilt:
+                    changed += 1
+        return changed
+
     def summary(self) -> dict:
         return self.stats.summary()
 
-    def publish_metrics(self, reg) -> None:
+    def publish_metrics(self, reg, base: Optional[dict] = None) -> None:
         """Refresh-loop tallies for the telemetry registry (repro.obs):
         monotonic counters for checks/refreshes/admissions plus the latest
         drift overlap as a gauge.  Pulled at snapshot boundaries only —
-        the refresh loop itself is untouched."""
+        the refresh loop itself is untouched.  ``base`` adds the folded
+        totals of a *replaced* manager (the elastic remesh path builds a
+        fresh one over the survivor plan) so counters stay monotonic
+        across the swap — keyed by ``summary()`` names."""
         s = self.stats
-        reg.counter("refresh.checks").set_total(s.checks)
-        reg.counter("refresh.refreshes").set_total(s.refreshes)
-        reg.counter("refresh.admitted").set_total(s.admitted)
-        reg.counter("refresh.evicted").set_total(s.evicted)
-        reg.counter("refresh.topo_rebuilds").set_total(s.topo_rebuilds)
-        reg.counter("refresh.bytes_h2d").set_total(s.refresh_bytes_h2d)
+        b = base or {}
+        reg.counter("refresh.checks").set_total(s.checks + b.get("checks", 0))
+        reg.counter("refresh.refreshes").set_total(
+            s.refreshes + b.get("refreshes", 0))
+        reg.counter("refresh.admitted").set_total(
+            s.admitted + b.get("admitted", 0))
+        reg.counter("refresh.evicted").set_total(
+            s.evicted + b.get("evicted", 0))
+        reg.counter("refresh.topo_rebuilds").set_total(
+            s.topo_rebuilds + b.get("topo_rebuilds", 0))
+        reg.counter("refresh.bytes_h2d").set_total(
+            s.refresh_bytes_h2d + b.get("refresh_bytes_h2d", 0))
         reg.gauge("refresh.last_overlap").set(s.last_overlap)

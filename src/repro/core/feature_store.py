@@ -67,12 +67,20 @@ class TieredStoreConfig:
     default number of batches the training loop samples ahead of the
     feature fill when the caller doesn't override it.  ``async_fills``
     stages source reads for announced batches on ``async_workers``
-    background threads so they overlap the device phase."""
+    background threads so they overlap the device phase.
+
+    ``read_retries`` bounds retry-after-``OSError`` on source reads
+    (every read goes through ``_timed_read``): a transient SSD hiccup is
+    re-read after ``retry_backoff_s`` (doubling per attempt) instead of
+    killing the pipeline — rows are bitwise identical whichever attempt
+    served them.  The error past the last retry propagates unchanged."""
     host_rows: int
     policy: str = "lookahead"
     lookahead: int = 4
     async_fills: bool = True
     async_workers: int = 1
+    read_retries: int = 2
+    retry_backoff_s: float = 0.005
 
     def __post_init__(self):
         if self.host_rows < 0:
@@ -85,6 +93,12 @@ class TieredStoreConfig:
         if self.async_workers < 1:
             raise ValueError(
                 f"async_workers must be >= 1, got {self.async_workers}")
+        if self.read_retries < 0:
+            raise ValueError(
+                f"read_retries must be >= 0, got {self.read_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {self.retry_backoff_s}")
 
 
 class FeatureStore:
@@ -136,6 +150,8 @@ class FeatureStore:
         self.evictions_in_window = 0  # victims that HAD a known next use
         self.announced_batches = 0
         self.prefetched_batches = 0
+        self.read_errors = 0        # source-read OSErrors (incl. retried)
+        self.read_retries_used = 0  # reads recovered by a retry
 
     # ---- lookahead hints -------------------------------------------------
     def announce(self, step: int, ids: np.ndarray) -> None:
@@ -184,11 +200,32 @@ class FeatureStore:
                 want, self._io.submit(self._timed_read, want))
 
     def _timed_read(self, ids: np.ndarray) -> np.ndarray:
-        t0 = time.perf_counter()
-        rows = np.asarray(self.source.get_features(ids), dtype=np.float32)
-        with self._lock:
-            self.ssd_read_s += time.perf_counter() - t0
-        return rows
+        """Every source read funnels through here: wall time is tallied
+        per attempt, and a transient ``OSError`` retries after a doubling
+        backoff (``config.read_retries`` / ``retry_backoff_s``) — the
+        rows are bitwise identical whichever attempt serves them, so a
+        retried read never perturbs the batch stream.  The error past the
+        last retry propagates unchanged."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                rows = np.asarray(self.source.get_features(ids),
+                                  dtype=np.float32)
+            except OSError:
+                with self._lock:
+                    self.ssd_read_s += time.perf_counter() - t0
+                    self.read_errors += 1
+                if attempt >= self.config.read_retries:
+                    raise
+                time.sleep(self.config.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+                with self._lock:
+                    self.read_retries_used += 1
+                continue
+            with self._lock:
+                self.ssd_read_s += time.perf_counter() - t0
+            return rows
 
     # ---- the gather hot path --------------------------------------------
     def record_hbm(self, requests: int, hits: int) -> None:
@@ -264,12 +301,10 @@ class FeatureStore:
         synchronous source read for the remainder."""
         if staged is None:
             t0 = time.perf_counter()
-            rows = np.asarray(self.source.get_features(uniq),
-                              dtype=np.float32)
+            rows = self._timed_read(uniq)  # tallies ssd_read_s + retries
             dt = time.perf_counter() - t0
             with self._lock:
                 self.stall_s += dt
-                self.ssd_read_s += dt
                 self.ssd_fill_rows += len(uniq)
                 self.ssd_fill_bytes += len(uniq) * self.feat_dim * S_FLOAT32
             return rows
@@ -289,12 +324,10 @@ class FeatureStore:
         dt_sync = 0.0
         if len(rest):
             t1 = time.perf_counter()
-            rows[~from_stage] = np.asarray(self.source.get_features(rest),
-                                           dtype=np.float32)
+            rows[~from_stage] = self._timed_read(rest)
             dt_sync = time.perf_counter() - t1
         with self._lock:
             self.stall_s += wait + dt_sync
-            self.ssd_read_s += dt_sync
             self.ssd_fills_async += int(from_stage.sum())
             self.ssd_fill_rows += len(uniq)
             self.ssd_fill_bytes += len(uniq) * self.feat_dim * S_FLOAT32
@@ -366,6 +399,8 @@ class FeatureStore:
                 "evictions_in_window": self.evictions_in_window,
                 "announced_batches": self.announced_batches,
                 "prefetched_batches": self.prefetched_batches,
+                "read_errors": self.read_errors,
+                "read_retries": self.read_retries_used,
             }
 
     def publish_metrics(self, reg) -> None:
@@ -391,6 +426,8 @@ class FeatureStore:
             announced = self.announced_batches
             prefetched = self.prefetched_batches
             resident = int((self._ids >= 0).sum())
+            read_errors = self.read_errors
+            read_retries = self.read_retries_used
         for (name, tier), v in s.items():
             reg.counter(name, tier=tier).set_total(int(v))
         # times publish as integer microseconds: float totals would break
@@ -401,8 +438,90 @@ class FeatureStore:
             int(stall_s * 1e6))
         reg.counter("store.announced_batches").set_total(announced)
         reg.counter("store.prefetched_batches").set_total(prefetched)
+        # resilience leg: transient read faults + the retries that
+        # recovered them (see docs/resilience.md)
+        reg.counter("fault.ssd_read_errors").set_total(read_errors)
+        reg.counter("recovery.ssd_read_retries").set_total(read_retries)
         reg.gauge("store.resident_rows", tier="host_ram").set(resident)
         reg.gauge("store.capacity_rows", tier="host_ram").set(self.capacity)
+
+    # ---- preemption-safe resume ------------------------------------------
+    def state_dict(self) -> dict:
+        """Host-tier residency + the lookahead bookkeeping, checkpointable:
+        which vertices are resident, their next-use/recency indices, the
+        announced-future table, the logical clock and the monotonic
+        tallies.  The feature *rows* are deliberately not serialized —
+        they are bitwise re-readable from the source on restore, so the
+        payload stays tiny (ids + int64 indices, not the row data).
+        In-flight staged reads are excluded (they are rebuilt by the
+        resumed lookahead window)."""
+        with self._lock:
+            resident = np.flatnonzero(self._ids >= 0)
+            return {
+                "version": 1,
+                "capacity": self.capacity,
+                "policy": self.config.policy,
+                "ids": self._ids[resident].copy(),
+                "next_use": self._next_use[resident].copy(),
+                "last_use": self._last_use[resident].copy(),
+                "future": {int(v): list(lst)
+                           for v, lst in self._future.items()},
+                "clock": self._clock,
+                "tallies": {
+                    "hbm_requests": self.hbm_requests,
+                    "hbm_hits": self.hbm_hits,
+                    "host_requests": self.host_requests,
+                    "host_hits": self.host_hits,
+                    "ssd_fill_rows": self.ssd_fill_rows,
+                    "ssd_fill_bytes": self.ssd_fill_bytes,
+                    "ssd_fills_async": self.ssd_fills_async,
+                    "evictions": self.evictions,
+                    "evictions_in_window": self.evictions_in_window,
+                    "announced_batches": self.announced_batches,
+                    "prefetched_batches": self.prefetched_batches,
+                    "read_errors": self.read_errors,
+                    "read_retries_used": self.read_retries_used,
+                },
+            }
+
+    def load_state_dict(self, state: dict, refill: bool = True) -> int:
+        """Restore a ``state_dict`` capture: the recovered hot set is
+        re-read from the source (one bulk ``_timed_read`` — bitwise the
+        rows it held before, so a resumed run serves the same values from
+        the same tier) and the next-use/recency/future bookkeeping picks
+        up exactly where the eviction policy left off.  A smaller
+        capacity keeps the most-recently-used prefix.  Returns the number
+        of rows restored.  ``refill=False`` restores bookkeeping only
+        (rows then refill organically as misses)."""
+        ids = np.asarray(state["ids"], dtype=np.int64)
+        next_use = np.asarray(state["next_use"], dtype=np.int64)
+        last_use = np.asarray(state["last_use"], dtype=np.int64)
+        if len(ids) > self.capacity:
+            order = np.argsort(last_use, kind="stable")[::-1]
+            keep = order[: self.capacity]
+            ids, next_use, last_use = ids[keep], next_use[keep], last_use[keep]
+        rows = self._timed_read(ids) if (refill and len(ids)) else None
+        with self._lock:
+            self._pos[:] = -1
+            self._ids[:] = -1
+            self._next_use[:] = NO_NEXT_USE
+            self._last_use[:] = 0
+            k = len(ids) if refill else 0
+            if k:
+                slots = np.arange(k)
+                self._ids[slots] = ids
+                self._rows[slots] = rows
+                self._pos[ids] = slots
+                self._next_use[slots] = next_use
+                self._last_use[slots] = last_use
+            self._future = {int(v): list(lst)
+                            for v, lst in state["future"].items()}
+            self._clock = int(state["clock"])
+            t = state.get("tallies", {})
+            for name, value in t.items():
+                if hasattr(self, name):
+                    setattr(self, name, max(getattr(self, name), value))
+            return k
 
     def close(self) -> None:
         """Drain the I/O pool (idempotent).  Parked staged reads are

@@ -172,8 +172,16 @@ class Telemetry:
         """Register a ``publish(registry)`` callable pulled at every
         snapshot — how TrafficCounter/Prefetcher/OnlineCacheManager/
         CliqueCache mirror their externally-accumulated tallies into the
-        registry with zero hot-path cost."""
+        registry with zero hot-path cost.  Re-registering a name
+        *replaces* the previous source (keeping its position): the
+        elastic recovery path swaps pipeline components mid-run, and a
+        stale source publishing alongside its replacement would
+        double-pull or trip the monotonic-counter guard."""
         with self._sources_lock:
+            for i, (n, _) in enumerate(self._sources):
+                if n == name:
+                    self._sources[i] = (name, publish)
+                    return
             self._sources.append((name, publish))
 
     def snapshot(self, step: int) -> dict:

@@ -99,6 +99,10 @@ def digest(lines: List[dict]) -> dict:
     dry_s = final_counters.get("prefetch.queue_dry_s", 0.0)
     refresh = {k.split(".", 1)[1]: v for k, v in final_counters.items()
                if k.startswith("refresh.")}
+    straggler = {k.split(".", 1)[1]: v for k, v in final_counters.items()
+                 if k.startswith("straggler.")}
+    resilience = {k: v for k, v in final_counters.items()
+                  if k.startswith(("fault.", "recovery.", "checkpoint."))}
     return {
         "run": meta["run"], "window": meta["window"],
         "device_steps": len(steps),
@@ -109,6 +113,7 @@ def digest(lines: List[dict]) -> dict:
         "queue_dry_s": dry_s,
         "spans": by_name, "windows": windows,
         "final_counters": final_counters, "refresh": refresh,
+        "straggler": straggler, "resilience": resilience,
         "n_spans": len(spans), "n_snapshots": len(snaps),
     }
 
@@ -157,6 +162,16 @@ def print_report(d: dict, out=None) -> None:
     if d["refresh"]:
         w("\nonline cache refresh: "
           + ", ".join(f"{k}={v:g}" for k, v in sorted(d["refresh"].items()))
+          + "\n")
+    if d.get("straggler"):
+        w("stragglers: "
+          + ", ".join(f"{k}={v:g}"
+                      for k, v in sorted(d["straggler"].items()))
+          + "\n")
+    if d.get("resilience"):
+        w("faults/recovery: "
+          + ", ".join(f"{k}={v:g}"
+                      for k, v in sorted(d["resilience"].items()))
           + "\n")
 
 

@@ -1,23 +1,49 @@
 """Sharding-aware checkpoint/restore (fault tolerance layer).
 
 * ``save_checkpoint``   — gathers leaves to host, writes one .npz atomically
-                          (tmp + os.replace), records the step.
-* ``restore_checkpoint``— loads and (optionally) device_puts every leaf to the
-                          shardings of a template pytree — restoring onto a
-                          *different* mesh (elastic shrink/grow) just works.
+                          (tmp + fsync + os.replace), records the step, a
+                          JSON manifest (leaf dtypes/shapes — what
+                          validation checks against the template tree) and
+                          an optional pickled *runtime* payload (sampler RNG
+                          boundary states, online-manager hotness, store
+                          residency — see docs/resilience.md).
+* ``restore_checkpoint``— validates the manifest against a template pytree
+                          (clear errors instead of a cryptic unflatten
+                          failure), loads, and (optionally) device_puts
+                          every leaf to the template's shardings — restoring
+                          onto a *different* mesh (elastic shrink/grow) just
+                          works.
+* ``latest_resumable_checkpoint`` — newest checkpoint that actually loads
+                          and validates; torn/partial files (a crash mid-
+                          write, a truncated copy) are skipped, not picked.
 * ``AsyncCheckpointer`` — background-thread writer so the train loop never
-                          blocks on persistence (checkpoint/restart at scale).
+                          blocks on persistence.  Write failures retry
+                          (bounded), are tallied for telemetry
+                          (``fault.checkpoint_write_errors`` /
+                          ``recovery.checkpoint_retries``), and an
+                          exhausted failure re-raises on ``close()`` — a
+                          checkpointless run must not look healthy.
 """
 from __future__ import annotations
 
+import json
 import os
+import pickle
 import queue
 import threading
+import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+MANIFEST_VERSION = 1
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is torn, truncated, or does not match the
+    template tree it is being restored into."""
 
 
 def _flatten(tree: Any):
@@ -25,17 +51,46 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+def _to_u8(payload: bytes) -> np.ndarray:
+    return np.frombuffer(payload, dtype=np.uint8)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    runtime: Optional[dict] = None,
+                    fault_hook: Optional[Callable[[str], None]] = None) -> str:
+    """Atomic write: tmp file + fsync + ``os.replace``, so a crash at any
+    point leaves either the previous checkpoint or a complete new one —
+    never a torn ``ckpt_*.npz``.  ``runtime`` is an arbitrary picklable
+    dict stored alongside the model leaves (``restore_checkpoint(...,
+    with_runtime=True)`` returns it).  ``fault_hook`` (tests/chaos bench)
+    runs after the tmp write, before the publish — the injection point
+    that simulates a crash mid-save."""
     ckpt_dir = Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    manifest = {"version": MANIFEST_VERSION, "step": int(step),
+                "n_leaves": len(leaves),
+                "leaves": [{"dtype": str(arrays[f"leaf_{i}"].dtype),
+                            "shape": list(arrays[f"leaf_{i}"].shape)}
+                           for i in range(len(leaves))]}
     arrays["__step"] = np.asarray(step)
+    arrays["__manifest"] = _to_u8(json.dumps(manifest).encode())
+    if runtime is not None:
+        arrays["__runtime"] = _to_u8(pickle.dumps(runtime))
     path = ckpt_dir / f"ckpt_{step:08d}.npz"
     tmp = ckpt_dir / f".tmp_ckpt_{step:08d}.npz"
-    with open(tmp, "wb") as f:
-        np.savez(f, **arrays)
-    os.replace(tmp, path)  # atomic publish
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        if fault_hook is not None:
+            fault_hook(str(tmp))
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
     return str(path)
 
 
@@ -47,9 +102,96 @@ def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
     return str(cands[-1]) if cands else None
 
 
-def restore_checkpoint(path: str, like: Any) -> tuple:
-    """Returns (step, tree) with every leaf resharded like ``like``'s leaves
-    (which may be arrays or ShapeDtypeStructs with shardings)."""
+def load_manifest(path: str) -> Optional[dict]:
+    """The embedded manifest, or None for a pre-manifest checkpoint."""
+    with np.load(path) as data:
+        if "__manifest" not in data:
+            return None
+        return json.loads(bytes(data["__manifest"]).decode())
+
+
+def validate_checkpoint(path: str, like: Any = None) -> dict:
+    """Open + structurally check one checkpoint; returns its manifest
+    (synthesized for pre-manifest files).  Raises :class:`CheckpointError`
+    naming exactly what is wrong: unreadable/torn archive, missing leaves,
+    step mismatch, or (with ``like``) leaf count/dtype/shape drift against
+    the template tree."""
+    try:
+        with np.load(path) as data:
+            keys = set(data.files)
+            if "__step" not in keys:
+                raise CheckpointError(f"{path}: no __step record "
+                                      "(not a checkpoint or torn write)")
+            step = int(data["__step"])
+            n_leaves = sum(1 for k in keys if k.startswith("leaf_"))
+            if "__manifest" in keys:
+                manifest = json.loads(bytes(data["__manifest"]).decode())
+            else:
+                manifest = {"version": 0, "step": step, "n_leaves": n_leaves,
+                            "leaves": None}
+            if manifest["step"] != step:
+                raise CheckpointError(
+                    f"{path}: manifest step {manifest['step']} != stored "
+                    f"step {step}")
+            missing = [f"leaf_{i}" for i in range(manifest["n_leaves"])
+                       if f"leaf_{i}" not in keys]
+            if missing:
+                raise CheckpointError(
+                    f"{path}: missing leaves {missing} (partial write?)")
+            if like is not None:
+                leaves, _ = _flatten(like)
+                if manifest["n_leaves"] != len(leaves):
+                    raise CheckpointError(
+                        f"{path}: has {manifest['n_leaves']} leaves, "
+                        f"template tree has {len(leaves)} — not the same "
+                        "model/optimizer structure")
+                if manifest["leaves"] is not None:
+                    for i, (rec, l) in enumerate(
+                            zip(manifest["leaves"], leaves)):
+                        want_shape = list(np.shape(l))
+                        want_dtype = str(np.asarray(l).dtype
+                                         if not hasattr(l, "dtype")
+                                         else l.dtype)
+                        if rec["shape"] != want_shape \
+                                or rec["dtype"] != want_dtype:
+                            raise CheckpointError(
+                                f"{path}: leaf {i} is "
+                                f"{rec['dtype']}{rec['shape']}, template "
+                                f"expects {want_dtype}{want_shape}")
+            return manifest
+    except CheckpointError:
+        raise
+    except Exception as e:  # zipfile/np.load errors on torn files
+        raise CheckpointError(f"{path}: unreadable ({e})") from e
+
+
+def latest_resumable_checkpoint(ckpt_dir: str,
+                                like: Any = None) -> Optional[str]:
+    """Newest checkpoint in ``ckpt_dir`` that validates (optionally
+    against a template tree).  Torn, truncated or structurally-mismatched
+    files are skipped — resume picks the newest checkpoint that will
+    actually load, not the newest filename."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    for p in sorted(d.glob("ckpt_*.npz"), reverse=True):
+        try:
+            validate_checkpoint(str(p), like=like)
+        except CheckpointError:
+            continue
+        return str(p)
+    return None
+
+
+def restore_checkpoint(path: str, like: Any, *,
+                       with_runtime: bool = False) -> tuple:
+    """Returns ``(step, tree)`` — or ``(step, tree, runtime)`` with
+    ``with_runtime=True`` (``runtime`` is None when the checkpoint has no
+    runtime payload) — with every leaf resharded like ``like``'s leaves
+    (which may be arrays or ShapeDtypeStructs with shardings).  The
+    manifest is validated first: a mismatched tree raises a clear
+    :class:`CheckpointError` instead of a cryptic unflatten failure."""
+    validate_checkpoint(path, like=like)
     data = np.load(path)
     step = int(data["__step"])
     leaves, treedef = _flatten(like)
@@ -64,46 +206,112 @@ def restore_checkpoint(path: str, like: Any) -> tuple:
             except Exception:
                 pass
         out.append(jax.numpy.asarray(arr, dtype=l.dtype))
-    return step, jax.tree_util.tree_unflatten(treedef, out)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if not with_runtime:
+        return step, tree
+    runtime = (pickle.loads(bytes(data["__runtime"]))
+               if "__runtime" in data.files else None)
+    return step, tree, runtime
 
 
 class AsyncCheckpointer:
     """Fire-and-forget checkpoint writer with a bounded queue (depth 1: a
-    newer snapshot supersedes an unwritten older one)."""
+    newer snapshot supersedes an unwritten older one).
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    A failed write retries in the worker (``retries`` extra attempts with
+    a short backoff) and is tallied; if every attempt fails the exception
+    is held and re-raised by ``close()`` — the contract
+    ``Prefetcher.close()`` set: background failures never vanish at
+    shutdown.  ``fault_plan`` threads the chaos harness into the write
+    path (site ``checkpoint_write``)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, retries: int = 1,
+                 fault_plan=None):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self.retries = int(retries)
+        self._fault_plan = fault_plan
         self._q: queue.Queue = queue.Queue(maxsize=1)
+        self.last_saved: Optional[str] = None
+        # ---- monotonic tallies (publish_metrics mirrors these) ----
+        self.saves = 0
+        self.write_errors = 0
+        self.retries_used = 0
+        self._exc: Optional[BaseException] = None
+        self._exc_raised = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
-        self.last_saved: Optional[str] = None
+
+    def _fault_hook(self, step: int):
+        if self._fault_plan is None:
+            return None
+        return lambda _tmp: self._fault_plan.raise_if("checkpoint_write",
+                                                      step=step)
 
     def _worker(self):
         while True:
             item = self._q.get()
             if item is None:
                 return
-            step, tree = item
-            self.last_saved = save_checkpoint(self.ckpt_dir, step, tree)
-            self._gc()
+            step, tree, runtime = item
+            for attempt in range(self.retries + 1):
+                try:
+                    self.last_saved = save_checkpoint(
+                        self.ckpt_dir, step, tree, runtime=runtime,
+                        fault_hook=self._fault_hook(step))
+                    self._gc()
+                    self.saves += 1
+                    break
+                except Exception as e:
+                    self.write_errors += 1
+                    if attempt < self.retries:
+                        self.retries_used += 1
+                        time.sleep(0.01 * (attempt + 1))
+                        continue
+                    # exhausted: hold for close() (a newer save may still
+                    # succeed — last error wins, never silently dropped)
+                    self._exc = e
+                    self._exc_raised = False
 
     def _gc(self):
         cands = sorted(Path(self.ckpt_dir).glob("ckpt_*.npz"))
         for p in cands[: -self.keep]:
             p.unlink(missing_ok=True)
 
-    def save(self, step: int, tree: Any):
+    def save(self, step: int, tree: Any, runtime: Optional[dict] = None):
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         try:
-            self._q.put_nowait((step, host_tree))
+            self._q.put_nowait((step, host_tree, runtime))
         except queue.Full:
             try:
                 self._q.get_nowait()  # drop the stale snapshot
             except queue.Empty:
                 pass
-            self._q.put_nowait((step, host_tree))
+            self._q.put_nowait((step, host_tree, runtime))
+
+    def summary(self) -> dict:
+        return {"saves": self.saves, "write_errors": self.write_errors,
+                "retries_used": self.retries_used,
+                "last_saved": self.last_saved}
+
+    def publish_metrics(self, reg) -> None:
+        reg.counter("checkpoint.saves").set_total(self.saves)
+        reg.counter("fault.checkpoint_write_errors").set_total(
+            self.write_errors)
+        reg.counter("recovery.checkpoint_retries").set_total(
+            self.retries_used)
 
     def close(self):
+        """Drain + stop the worker.  Raises if the worker thread failed to
+        join (a wedged write must not be silently abandoned) or if a write
+        exhausted its retries and the failure was never surfaced."""
         self._q.put(None)
         self._thread.join(timeout=30)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                "AsyncCheckpointer worker failed to stop within 30s "
+                "(checkpoint write wedged?) — the last checkpoint may be "
+                "stale")
+        if self._exc is not None and not self._exc_raised:
+            self._exc_raised = True
+            raise self._exc

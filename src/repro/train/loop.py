@@ -14,6 +14,15 @@ int8-error-feedback compressed).
 The multi-device run is simulated faithfully on one process: each simulated
 device consumes its own tablet stream and the synchronized step averages
 gradients — mathematically identical to synchronous DP all-reduce.
+
+The pipeline is **relaunchable**: everything derived from the (devices,
+plan, backend) triple — builders, lookahead windows, the Prefetcher, the
+sharded mesh step — is built by one ``launch(start_step)`` closure, so the
+elastic recovery path (``resilience=``, see docs/resilience.md) can tear
+the pipeline down on a simulated device loss, replan onto the survivors
+with ``replan_on_topology_change``, and launch a fresh pipeline at the
+current step; telemetry sources re-register by name with folded base
+totals so the registry counters stay monotonic across the swap.
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.planner import LegionPlan
+from repro.core.planner import LegionPlan, replan_on_topology_change
 from repro.core.unified_cache import TrafficCounter
 from repro.graph.csr import CSRGraph
 from repro.models.gnn import (GNNConfig, defs as gnn_defs,
@@ -34,9 +43,28 @@ from repro.models.params import init_from_defs
 from repro.obs import maybe_span
 from repro.train.batch import (HostBatchBuilder, make_batch_builder,
                                pack_sharded_specs)
-from repro.train.checkpoint import AsyncCheckpointer, latest_checkpoint, restore_checkpoint
+from repro.train.checkpoint import (AsyncCheckpointer,
+                                    latest_resumable_checkpoint,
+                                    restore_checkpoint)
 from repro.train.optimizer import adamw, apply_updates
 from repro.train.pipeline import LookaheadWindow, Prefetcher, StragglerMonitor
+from repro.train.resilience import (ResilienceConfig, ResilienceStats,
+                                    RngJournal, topology_from_partition)
+
+# pipeline/refresh summary keys folded into the monotonic base totals when
+# a remesh replaces the Prefetcher / OnlineCacheManager mid-run
+_PIPE_FOLD_KEYS = ("batches_built", "gets", "host_build_s_total",
+                   "host_pack_s_total", "queue_dry_s_total",
+                   "worker_deaths", "worker_restarts")
+_REFRESH_FOLD_KEYS = ("checks", "refreshes", "admitted", "evicted",
+                      "topo_rebuilds", "refresh_bytes_h2d")
+
+
+def _fold(base: dict, summary: dict, keys: Sequence[str]) -> None:
+    for k in keys:
+        v = summary.get(k)
+        if isinstance(v, (int, float)):
+            base[k] = base.get(k, 0) + v
 
 
 def make_gnn_batch(g: CSRGraph, cache, cfg: GNNConfig, seeds: np.ndarray,
@@ -144,6 +172,10 @@ class GNNTrainResult:
     # tiered feature store digest (FeatureStore.summary()): per-tier
     # hit/fill/eviction tallies when train_gnn ran with one, {} otherwise
     store: dict = dataclasses.field(default_factory=dict)
+    # resilience digest (ResilienceStats.summary() + fault-plan tallies):
+    # remesh/restore/injection activity when train_gnn ran with a
+    # resilience config or recovered runtime state, {} otherwise
+    resilience: dict = dataclasses.field(default_factory=dict)
 
 
 def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
@@ -159,7 +191,8 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
               refresh_interval: Optional[int] = None,
               refresh_config=None, telemetry=None,
               feature_store=None,
-              lookahead: Optional[int] = None) -> GNNTrainResult:
+              lookahead: Optional[int] = None,
+              resilience: Optional[ResilienceConfig] = None) -> GNNTrainResult:
     """Train SAGE/GCN with the Legion pipeline.  ``shuffle='global'`` ignores
     tablets and draws seeds from the full training set (the Fig. 11 baseline).
 
@@ -228,6 +261,20 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     shard_map data parallelism; ``compress_grads=True`` additionally swaps
     the gradient all-reduce for the int8 error-feedback compressed version
     (4x less DP wire — the DCN-saving configuration for the pod axis).
+
+    ``resilience`` (a ``repro.train.resilience.ResilienceConfig``) turns
+    on the recovery hooks: bounded prefetch-worker respawns, retried
+    checkpoint writes, and — on a (simulated) device loss — an in-place
+    remesh onto the survivors (``replan_on_topology_change`` + a fresh
+    pipeline launch; the sharded backend downgrades to per-device
+    execution with host-side gradient exchange, which is mathematically
+    the same synchronous DP).  Its optional ``fault_plan`` injects
+    deterministic faults for tests and the chaos bench.  Checkpoints
+    written with ``checkpoint_dir`` additionally carry *runtime* state —
+    sampler RNG boundary states, online-manager hotness, store residency
+    — and ``resume=True`` restores all of it, so a preempted job
+    continues the exact batch sequence with its learned hot set instead
+    of re-warming (see docs/resilience.md).
     """
     if devices is None:
         devices = sorted(plan.partition.tablets) if plan is not None else [0]
@@ -258,8 +305,18 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         # clique-major order == shard stacking order == mesh position
         devices = [d for c in exec_cliques for d in c]
     n_dev = len(devices)
-    per_dev = max(cfg.batch_size // max(n_dev, 1), 16)
     counter = counter if counter is not None else TrafficCounter.for_devices(devices)
+
+    resil = resilience
+    fplan = resil.fault_plan if resil is not None else None
+    rstats = ResilienceStats()
+    if fplan is not None and any(
+            s.site == "device_loss" for s in fplan._specs):
+        if plan is None or mesh is not None:
+            raise ValueError(
+                "device_loss recovery needs a LegionPlan to replan from "
+                "and does not compose with an explicit mesh= (the remesh "
+                "rebuilds the executor itself)")
 
     tele = telemetry
     if tele is not None and not hasattr(tele, "span"):
@@ -276,13 +333,22 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
     step0 = 0
 
     ckpt = None
+    runtime0 = None
     if checkpoint_dir:
-        ckpt = AsyncCheckpointer(checkpoint_dir)
+        ckpt = AsyncCheckpointer(
+            checkpoint_dir,
+            retries=(resil.checkpoint_retries if resil is not None else 1),
+            fault_plan=fplan)
         if resume:
-            path = latest_checkpoint(checkpoint_dir)
+            # newest checkpoint that actually validates against the model
+            # tree — torn/partial files from a crash are skipped, not
+            # picked (see latest_resumable_checkpoint)
+            path = latest_resumable_checkpoint(checkpoint_dir,
+                                               like=(params, opt_state))
             if path:
-                step0, (params, opt_state) = restore_checkpoint(
-                    path, (params, opt_state))
+                step0, (params, opt_state), runtime0 = restore_checkpoint(
+                    path, (params, opt_state), with_runtime=True)
+                rstats.resumed_from_step = step0
 
     ef_state = None
     if mesh is not None and compress_grads:
@@ -315,14 +381,19 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         return params, opt_state, loss, metrics["acc"]
 
     rngs = {d: np.random.default_rng(seed + 17 * d) for d in devices}
+    # RNG journal: boundary states at each step, so checkpoints capture
+    # "state with steps < k drawn" even while the lookahead window has the
+    # live generator several steps ahead (see resilience.RngJournal)
+    journal = {d: RngJournal() for d in devices} if ckpt is not None else None
+    if runtime0 is not None:
+        for d, st_rng in runtime0.get("rng", {}).items():
+            if d in rngs:
+                rngs[d].bit_generator.state = st_rng
+        rstats.runtime_restored = "rng" in runtime0
     all_train = (plan.partition.train_vertices if plan is not None
                  else np.arange(g.n))
-    streams = {}
-    for d in devices:
-        tablet = (plan.partition.tablets[d] if (plan is not None and shuffle == "local")
-                  else all_train)
-        streams[d] = tablet
 
+    rc = None
     manager = None
     if plan is not None and (refresh_interval is not None
                              or refresh_config is not None):
@@ -338,6 +409,11 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                 "buffer retains one epoch, so queued specs older than one "
                 "refresh would gather from a released buffer")
         manager = OnlineCacheManager(g, plan, rc, counter=counter)
+        if runtime0 is not None and runtime0.get("manager") is not None:
+            # recover the learned hot set: restore the blended hotness and
+            # delta-replan each clique's residency from it in one pass
+            rstats.cache_rebuilds += manager.load_state_dict(
+                runtime0["manager"], reapply=True)
 
     store = feature_store
     if store is not None and not hasattr(store, "gather"):
@@ -346,122 +422,18 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         from repro.core.feature_store import FeatureStore
 
         store = FeatureStore(g, store, counter=counter)
+    if store is not None and fplan is not None:
+        # thread the chaos harness under the store: ssd_read/ssd_stall
+        # faults fire inside _timed_read's retry loop
+        store.source = fplan.wrap_source(store.source)
+    if store is not None and runtime0 is not None \
+            and runtime0.get("store") is not None:
+        store.load_state_dict(runtime0["store"])
     if lookahead is not None and store is None:
         raise ValueError("lookahead= needs a feature_store to feed "
                          "(announce/prefetch hints go to the store)")
     window = (lookahead if lookahead is not None
               else (store.config.lookahead if store is not None else 0))
-
-    builders = {}
-    for d in devices:
-        cache = plan.cache_for_device(d) if plan is not None else None
-        kw = ({"gather": gather, "fused": fused, "bucket": bucket,
-               "sampler": sampler}
-              if backend in ("device", "sharded") else {})
-        if manager is not None:
-            kw["observer"] = manager.observer_for(d)
-        builders[d] = make_batch_builder(backend, g, cache, cfg.fanouts,
-                                         counter, d, **kw)
-        builders[d].telemetry = tele
-        builders[d].store = store
-
-    sharded_step = None
-    clique_caches = None
-    shard_stack_memo = {}
-    if backend == "sharded":
-        from repro.core.unified_cache import stack_hierarchical_shards
-        from repro.launch.mesh import (CLIQUE_AXIS, POD_AXIS,
-                                       make_hierarchical_mesh)
-
-        clique_caches = [plan.caches[ci] for ci in exec_clique_ids]
-        hier_mesh = make_hierarchical_mesh(exec_cliques)
-        sharded_step = _make_sharded_step(
-            cfg, opt, hier_mesh, (POD_AXIS, CLIQUE_AXIS),
-            n_total=per_dev * n_dev, feat_dim=g.feat_dim,
-            impl=builders[devices[0]].gather)
-
-        def hierarchical_shards(epochs):
-            """The (K_c, K_g, R, Dp) mesh tensor for one per-clique epoch
-            vector, memoized: cliques refresh independently, so the stack
-            rebuilds only when some clique's epoch moves.  Two entries are
-            retained — the same double-buffer horizon as the caches — so
-            queued steps straddling a refresh keep their stack alive.
-            A rebuild is one device-side restack (the per-clique inputs
-            are already HBM-resident and epoch-memoized per cache; only
-            the refreshed clique's shards crossed PCIe), paid once per
-            refresh *event*, never per step; an in-place row update
-            cannot do better here because R_max may change when a refresh
-            re-homes slot owners."""
-            if epochs not in shard_stack_memo:
-                while len(shard_stack_memo) >= 2:
-                    shard_stack_memo.pop(next(iter(shard_stack_memo)))
-                shard_stack_memo[epochs] = stack_hierarchical_shards(
-                    clique_caches, epochs)
-            return shard_stack_memo[epochs]
-
-    def make_spec_fn(d: int):
-        """Host phase of one device's part of a *synchronized* step.  One
-        closure per device so the Prefetcher pool can build them
-        concurrently: each owns its device's RNG stream, builder and
-        observer (single-owner — the step barrier keeps one device's
-        builds serial across steps), and shared TrafficCounter tallies
-        commute under the counter's lock, so totals stay bit-identical to
-        the serial build order."""
-        rng, tablet, builder = rngs[d], streams[d], builders[d]
-
-        if store is not None:
-            # sample-ahead mode: the window pre-samples up to ``window``
-            # future steps (strict step order — same RNG sequence as the
-            # plain path), announces their store-request sets and issues
-            # their SSD prefetches, then fills the front spec
-            def sample_one(step: int, rng=rng, tablet=tablet,
-                           builder=builder):
-                seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
-                return builder.sample_spec(seeds, rng)
-
-            win = LookaheadWindow(builder, store, sample_one,
-                                  window=window,
-                                  limit=max(steps - step0, 0), dev=d)
-            build = win.build
-        else:
-            def build(step: int, rng=rng, tablet=tablet, builder=builder):
-                seeds = tablet[rng.integers(0, len(tablet), size=per_dev)]
-                return builder.build_spec(seeds, rng)
-
-        if tele is None:
-            return build
-
-        def spec_fn(step: int):
-            # runs on a prefetch worker thread: the span is what makes
-            # the build pool's concurrency visible in the trace
-            with tele.span("spec_build", step=step, dev=d):
-                return build(step)
-        return spec_fn
-
-    def finalize_batch(item):
-        """Device phase: finalize every part and concatenate (==DP).  Runs
-        on the consumer thread; with the device backend the cache gather is
-        dispatched asynchronously and overlaps the in-flight train step.
-        The sharded backend dequeues an already-packed hierarchical batch
-        (the Prefetcher's pack_fn ran on the worker); here it only resolves
-        the epoch-pinned shard stack the packed slots index into."""
-        if backend == "sharded":
-            packed = dict(item)
-            epochs = tuple(int(e) for e in packed.pop("cache_epochs"))
-            return hierarchical_shards(epochs), packed
-        parts = [builders[d].finalize(s) for d, s in zip(devices, item)]
-        if len(parts) == 1:
-            return parts[0]
-        return {k: jnp.concatenate([p[k] for p in parts]) for k in parts[0]}
-
-    def pack_fn(spec_groups):
-        """Sharded second host phase: per-clique spec groups -> the 2-D
-        mesh-layout pack, then hand each spec's staging buffer back to its
-        builder's pool."""
-        packed = pack_sharded_specs(spec_groups, g.feat_dim, bucket=bucket)
-        for d, s in zip(devices, (s for gr in spec_groups for s in gr)):
-            builders[d].release_spec(s)
-        return packed
 
     def sampling_summary():
         """Sampling-path digest off the shared counter: the sharded
@@ -471,47 +443,295 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                 "host_sampled_edges": counter.host_sampled_edges,
                 "topo_hit_rate": counter.topo_hit_rate}
 
-    prefetcher = Prefetcher(part_fns=[make_spec_fn(d) for d in devices],
-                            part_group_sizes=(
-                                [len(c) for c in exec_cliques]
-                                if backend == "sharded" else None),
-                            workers=prefetch_workers, depth=prefetch_depth,
-                            limit=max(steps - step0, 0),
-                            pre_batch_hook=(manager.on_step
-                                            if manager is not None else None),
-                            pack_fn=(pack_fn if backend == "sharded"
-                                     else None),
-                            extra_summary=sampling_summary,
-                            telemetry=tele)
+    # ---- the relaunchable pipeline ------------------------------------
+    # everything derived from (devices, plan, backend) lives in this
+    # mutable cell so the device-loss recovery path can rebuild it;
+    # *_base carry closed components' totals (monotonic across a swap)
+    st = {"devices": list(devices), "plan": plan, "backend": backend,
+          "manager": manager, "exec_cliques": exec_cliques,
+          "per_dev": max(cfg.batch_size // max(n_dev, 1), 16),
+          "prefetcher": None, "finalize": None, "sharded_step": None}
+    pipeline_base: dict = {}
+    refresh_base: dict = {}
+    refresh_events: List[dict] = []
+    streams = {}
+
+    def launch(start_step: int) -> None:
+        """(Re)build the batch pipeline to produce steps
+        ``start_step..steps-1`` from the current (devices, plan, backend)
+        state: tablet streams, builders (+observers), the sharded mesh
+        step when applicable, per-device spec closures (lookahead windows
+        when a store is attached) and the Prefetcher itself."""
+        devs, plan_l = st["devices"], st["plan"]
+        backend_l, manager_l = st["backend"], st["manager"]
+        per_dev = st["per_dev"]
+        for d in devs:
+            streams[d] = (plan_l.partition.tablets[d]
+                          if (plan_l is not None and shuffle == "local")
+                          else all_train)
+
+        builders = {}
+        for d in devs:
+            cache = plan_l.cache_for_device(d) if plan_l is not None else None
+            kw = ({"gather": gather, "fused": fused, "bucket": bucket,
+                   "sampler": sampler}
+                  if backend_l in ("device", "sharded") else {})
+            if manager_l is not None:
+                kw["observer"] = manager_l.observer_for(d)
+            builders[d] = make_batch_builder(backend_l, g, cache, cfg.fanouts,
+                                             counter, d, **kw)
+            builders[d].telemetry = tele
+            builders[d].store = store
+
+        sharded_step = None
+        if backend_l == "sharded":
+            from repro.core.unified_cache import stack_hierarchical_shards
+            from repro.launch.mesh import (CLIQUE_AXIS, POD_AXIS,
+                                           make_hierarchical_mesh)
+
+            exec_cl = st["exec_cliques"]
+            clique_caches = [plan_l.caches[ci] for ci in exec_clique_ids]
+            hier_mesh = make_hierarchical_mesh(exec_cl)
+            sharded_step = _make_sharded_step(
+                cfg, opt, hier_mesh, (POD_AXIS, CLIQUE_AXIS),
+                n_total=per_dev * len(devs), feat_dim=g.feat_dim,
+                impl=builders[devs[0]].gather)
+            shard_stack_memo = {}
+
+            def hierarchical_shards(epochs):
+                """The (K_c, K_g, R, Dp) mesh tensor for one per-clique
+                epoch vector, memoized: cliques refresh independently, so
+                the stack rebuilds only when some clique's epoch moves.
+                Two entries are retained — the same double-buffer horizon
+                as the caches — so queued steps straddling a refresh keep
+                their stack alive.  A rebuild is one device-side restack
+                (the per-clique inputs are already HBM-resident and
+                epoch-memoized per cache; only the refreshed clique's
+                shards crossed PCIe), paid once per refresh *event*,
+                never per step; an in-place row update cannot do better
+                here because R_max may change when a refresh re-homes
+                slot owners."""
+                if epochs not in shard_stack_memo:
+                    while len(shard_stack_memo) >= 2:
+                        shard_stack_memo.pop(next(iter(shard_stack_memo)))
+                    shard_stack_memo[epochs] = stack_hierarchical_shards(
+                        clique_caches, epochs)
+                return shard_stack_memo[epochs]
+        st["sharded_step"] = sharded_step
+
+        def make_spec_fn(d: int):
+            """Host phase of one device's part of a *synchronized* step.
+            One closure per device so the Prefetcher pool can build them
+            concurrently: each owns its device's RNG stream, builder and
+            observer (single-owner — the step barrier keeps one device's
+            builds serial across steps), and shared TrafficCounter tallies
+            commute under the counter's lock, so totals stay bit-identical
+            to the serial build order."""
+            rng, tablet, builder = rngs[d], streams[d], builders[d]
+            jr = journal[d] if journal is not None else None
+
+            if store is not None:
+                # sample-ahead mode: the window pre-samples up to
+                # ``window`` future steps (strict step order — same RNG
+                # sequence as the plain path), announces their
+                # store-request sets and issues their SSD prefetches,
+                # then fills the front spec
+                def sample_one(step: int, rng=rng, tablet=tablet,
+                               builder=builder, jr=jr):
+                    seeds = tablet[rng.integers(0, len(tablet),
+                                                size=per_dev)]
+                    spec = builder.sample_spec(seeds, rng)
+                    if jr is not None:
+                        # boundary state: steps <= this one fully drawn
+                        jr.record(step + 1, rng)
+                    return spec
+
+                win = LookaheadWindow(builder, store, sample_one,
+                                      window=window, limit=steps, dev=d,
+                                      start=start_step)
+                build = win.build
+            else:
+                def build(step: int, rng=rng, tablet=tablet,
+                          builder=builder, jr=jr):
+                    seeds = tablet[rng.integers(0, len(tablet),
+                                                size=per_dev)]
+                    spec = builder.build_spec(seeds, rng)
+                    if jr is not None:
+                        jr.record(step + 1, rng)
+                    return spec
+
+            if tele is None:
+                return build
+
+            def spec_fn(step: int):
+                # runs on a prefetch worker thread: the span is what makes
+                # the build pool's concurrency visible in the trace
+                with tele.span("spec_build", step=step, dev=d):
+                    return build(step)
+            return spec_fn
+
+        def finalize_batch(item):
+            """Device phase: finalize every part and concatenate (==DP).
+            Runs on the consumer thread; with the device backend the cache
+            gather is dispatched asynchronously and overlaps the in-flight
+            train step.  The sharded backend dequeues an already-packed
+            hierarchical batch (the Prefetcher's pack_fn ran on the
+            worker); here it only resolves the epoch-pinned shard stack
+            the packed slots index into."""
+            if backend_l == "sharded":
+                packed = dict(item)
+                epochs = tuple(int(e) for e in packed.pop("cache_epochs"))
+                return hierarchical_shards(epochs), packed
+            parts = [builders[d].finalize(s) for d, s in zip(devs, item)]
+            if len(parts) == 1:
+                return parts[0]
+            return {k: jnp.concatenate([p[k] for p in parts])
+                    for k in parts[0]}
+
+        def pack_fn(spec_groups):
+            """Sharded second host phase: per-clique spec groups -> the
+            2-D mesh-layout pack, then hand each spec's staging buffer
+            back to its builder's pool."""
+            packed = pack_sharded_specs(spec_groups, g.feat_dim,
+                                        bucket=bucket)
+            for d, s in zip(devs, (s for gr in spec_groups for s in gr)):
+                builders[d].release_spec(s)
+            return packed
+
+        if journal is not None:
+            for d in devs:
+                # the state that samples ``start_step`` onward: a
+                # checkpoint taken before any build can still resume here
+                journal.setdefault(d, RngJournal()).record(start_step,
+                                                           rngs[d])
+        st["finalize"] = finalize_batch
+        st["prefetcher"] = Prefetcher(
+            part_fns=[make_spec_fn(d) for d in devs],
+            part_group_sizes=([len(c) for c in st["exec_cliques"]]
+                              if backend_l == "sharded" else None),
+            workers=prefetch_workers, depth=prefetch_depth,
+            limit=max(steps - start_step, 0),
+            pre_batch_hook=(manager_l.on_step
+                            if manager_l is not None else None),
+            pack_fn=(pack_fn if backend_l == "sharded" else None),
+            extra_summary=sampling_summary, telemetry=tele,
+            start_step=start_step,
+            max_restarts=(resil.worker_restarts if resil is not None else 0),
+            fault_plan=fplan)
+
+    def remesh(dead: List[int], at_step: int) -> None:
+        """Device-loss recovery: tear the pipeline down, replan onto the
+        survivors (dead devices' tablets and hotness merge into their
+        clique peers — ``replan_on_topology_change``), and launch a fresh
+        pipeline at the current step.  The sharded mesh cannot shrink in
+        place, so that backend downgrades to per-device execution with
+        host-side gradient exchange (concatenated batch == synchronous
+        DP, mathematically unchanged).  Survivor RNG streams re-seed
+        deterministically from (seed, step, device), so a chaos run with
+        a fixed fault plan is reproducible end to end."""
+        t0 = time.perf_counter()
+        old = st["prefetcher"]
+        old.close()  # a pending organic worker failure still surfaces
+        _fold(pipeline_base, old.summary(), _PIPE_FOLD_KEYS)
+        survivors = [d for d in st["devices"] if d not in set(dead)]
+        if not survivors:
+            raise RuntimeError(
+                f"device(s) {sorted(dead)} lost at step {at_step} and no "
+                "survivors remain — nothing to remesh onto")
+        topo = topology_from_partition(st["plan"].partition)
+        new_plan = replan_on_topology_change(g, st["plan"], topo,
+                                             alive=survivors)
+        st["plan"] = new_plan
+        st["devices"] = [d for c in new_plan.partition.cliques for d in c]
+        st["per_dev"] = max(cfg.batch_size // max(len(survivors), 1), 16)
+        if st["backend"] == "sharded":
+            st["backend"] = "device"
+        for d in st["devices"]:
+            rngs[d] = np.random.default_rng([seed, at_step, d])
+        if st["manager"] is not None:
+            _fold(refresh_base, st["manager"].summary(), _REFRESH_FOLD_KEYS)
+            refresh_events.extend(st["manager"].stats.events)
+            from repro.core.cache_manager import OnlineCacheManager
+
+            # a fresh manager over the survivor plan: replan already
+            # merged the dead devices' hotness into the new plan stats
+            st["manager"] = OnlineCacheManager(g, new_plan, rc,
+                                               counter=counter)
+        launch(at_step)
+        dt = time.perf_counter() - t0
+        rstats.remesh_events += 1
+        rstats.devices_lost += len(dead)
+        rstats.remesh_s += dt
+        rstats.events.append({"step": at_step, "lost": sorted(map(int, dead)),
+                              "survivors": len(survivors),
+                              "backend": st["backend"], "remesh_s": dt})
+        if tele is not None:
+            tele.event("remesh", step=at_step,
+                       lost=sorted(map(int, dead)),
+                       survivors=len(survivors))
+
+    launch(step0)
+
     if tele is not None:
         # metric sources pulled at every windowed snapshot: components
-        # mirror their own tallies, nothing extra runs on hot paths
+        # mirror their own tallies, nothing extra runs on hot paths.
+        # Sources that a remesh replaces are registered as closures over
+        # the pipeline cell (add_source replaces by name) with folded
+        # base totals, so counters stay monotonic across the swap.
         tele.add_source("traffic", counter.publish_metrics)
-        tele.add_source("prefetch", prefetcher.publish_metrics)
+        tele.add_source(
+            "prefetch",
+            lambda reg: st["prefetcher"].publish_metrics(
+                reg, base=pipeline_base))
         if store is not None:
             tele.add_source("store", store.publish_metrics)
-        if manager is not None:
-            tele.add_source("refresh", manager.publish_metrics)
+        if st["manager"] is not None:
+
+            def publish_refresh(reg):
+                if st["manager"] is not None:
+                    st["manager"].publish_metrics(reg, base=refresh_base)
+            tele.add_source("refresh", publish_refresh)
         if plan is not None:
-            for ci, cache in enumerate(plan.caches):
-                tele.add_source(
-                    f"cache{ci}",
-                    (lambda reg, c=cache, ci=ci:
-                     c.publish_metrics(reg, clique=ci)))
+
+            def publish_caches(reg):
+                for ci, cache in enumerate(st["plan"].caches):
+                    cache.publish_metrics(reg, clique=ci)
+            tele.add_source("caches", publish_caches)
+        if ckpt is not None:
+            tele.add_source("checkpoint", ckpt.publish_metrics)
+        if resil is not None or rstats.resumed_from_step is not None:
+            tele.add_source("resilience", rstats.publish_metrics)
+        if fplan is not None:
+            tele.add_source("faults", fplan.publish_metrics)
         h_step = tele.registry.histogram("step.time_s")
+        h_flag = tele.registry.histogram("straggler.step_time_s")
     monitor = StragglerMonitor()
+    if tele is not None:
+        tele.add_source("straggler", monitor.publish_metrics)
     losses, accs, epoch_times = [], [], []
     steps_per_epoch = max(len(all_train) // max(cfg.batch_size, 1), 1)
     t_epoch = time.perf_counter()
+    reached = step0
     try:
         # priming fetch is pipeline warm-up (first host build, cold
         # workers), so it gets its own span; train_loop is the
         # steady-state stepping loop that device_step spans tile.
         with maybe_span(tele, "pipeline_prime"):
-            next_batch = (finalize_batch(prefetcher.get())
+            next_batch = (st["finalize"](st["prefetcher"].get())
                           if steps > step0 else None)
         with maybe_span(tele, "train_loop"):
             for step in range(step0, steps):
+                if fplan is not None:
+                    dead = fplan.device_losses(step)
+                    if dead:
+                        if resil is None or resil.on_device_loss == "raise":
+                            raise RuntimeError(
+                                f"device(s) {sorted(dead)} lost at step "
+                                f"{step} (on_device_loss='raise')")
+                        # the in-flight batch was built by the lost
+                        # topology: discard it, remesh, rebuild step
+                        remesh(dead, step)
+                        next_batch = st["finalize"](st["prefetcher"].get())
                 t0 = time.perf_counter()
                 # the device-step span covers dispatch, the overlapped
                 # prefetch of step i+1, and the block on step i's loss —
@@ -522,9 +742,9 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                         params, opt_state, ef_state, loss = train_step(
                             params, opt_state, ef_state, batch)
                         acc = jnp.zeros(())
-                    elif backend == "sharded":
+                    elif st["backend"] == "sharded":
                         shards, packed = batch
-                        params, opt_state, loss, acc = sharded_step(
+                        params, opt_state, loss, acc = st["sharded_step"](
                             params, opt_state, shards, packed)
                     else:
                         params, opt_state, loss, acc = train_step_plain(
@@ -533,19 +753,24 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                     # the host phase comes off the prefetch queue, and
                     # finalize's device gather rides the same async
                     # dispatch stream as the step.
-                    next_batch = (finalize_batch(prefetcher.get())
+                    next_batch = (st["finalize"](st["prefetcher"].get())
                                   if step + 1 < steps else None)
                     loss.block_until_ready()
                 dt = time.perf_counter() - t0
-                monitor.record(dt)
+                flagged = monitor.record(dt)
                 losses.append(float(loss))
                 accs.append(float(acc))
+                reached = step + 1
                 if tele is not None:
                     h_step.observe(dt)
+                    if flagged:
+                        h_flag.observe(dt)
                     if (step + 1) % tele.config.window == 0:
                         tele.snapshot(step + 1)
                 if ckpt and (step + 1) % checkpoint_every == 0:
-                    ckpt.save(step + 1, (params, opt_state))
+                    ckpt.save(step + 1, (params, opt_state),
+                              runtime=_runtime_state(st, journal, store,
+                                                     step + 1))
                 if (step + 1) % steps_per_epoch == 0:
                     epoch_times.append(time.perf_counter() - t_epoch)
                     t_epoch = time.perf_counter()
@@ -554,7 +779,7 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
         # the final telemetry snapshot (exact totals need every worker
         # build accounted) and the final checkpoint must happen either way
         try:
-            prefetcher.close()
+            st["prefetcher"].close()
         finally:
             try:
                 if store is not None:
@@ -566,14 +791,37 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                     tele.close(final_step=steps)
             finally:
                 if ckpt:
-                    ckpt.save(steps, (params, opt_state))
+                    # the step actually completed — an aborted run must
+                    # not publish a checkpoint labeled with a step it
+                    # never reached
+                    ckpt.save(reached, (params, opt_state),
+                              runtime=_runtime_state(st, journal, store,
+                                                     reached))
                     ckpt.close()
+
+    pipe = st["prefetcher"].summary()
+    for k, v in pipeline_base.items():
+        if k in pipe:
+            pipe[k] = pipe[k] + v
+    refresh = {}
+    if st["manager"] is not None:
+        refresh = st["manager"].summary()
+        for k, v in refresh_base.items():
+            refresh[k] = refresh.get(k, 0) + v
+        refresh["events"] = refresh_events + refresh.get("events", [])
+    resilience_digest = {}
+    if resil is not None or rstats.resumed_from_step is not None \
+            or rstats.remesh_events:
+        resilience_digest = rstats.summary()
+        if fplan is not None:
+            resilience_digest["faults"] = fplan.summary()
+        if ckpt is not None:
+            resilience_digest["checkpoint"] = ckpt.summary()
     return GNNTrainResult(losses=losses, accs=accs, epoch_times=epoch_times,
                           counter=counter, straggler=monitor.summary(),
-                          steps=steps - step0, backend=backend,
-                          pipeline=prefetcher.summary(),
-                          refresh=(manager.summary()
-                                   if manager is not None else {}),
+                          steps=steps - step0, backend=st["backend"],
+                          pipeline=pipe,
+                          refresh=refresh,
                           sampling=sampling_summary(),
                           telemetry=({} if tele is None else {
                               "jsonl_path": tele.config.jsonl_path,
@@ -582,4 +830,31 @@ def train_gnn(g: CSRGraph, plan: Optional[LegionPlan], cfg: GNNConfig, *,
                               "open_spans": tele.open_spans,
                               "window": tele.config.window}),
                           store=(store.summary() if store is not None
-                                 else {}))
+                                 else {}),
+                          resilience=resilience_digest)
+
+
+def _runtime_state(st: dict, journal, store, next_step: int) -> dict:
+    """The runtime payload for a checkpoint at boundary ``next_step``:
+    per-device sampler RNG states *at that boundary* (from the journal —
+    the live generators are already ahead by the lookahead window), the
+    online manager's learned hotness, and the store's host-tier
+    residency.  ``restore_checkpoint(..., with_runtime=True)`` +
+    ``train_gnn(resume=True)`` put all of it back."""
+    rt: dict = {"version": 1,
+                "devices": [int(d) for d in st["devices"]]}
+    if journal is not None:
+        states = {}
+        for d in st["devices"]:
+            s = journal[d].state_for(next_step)
+            if s is None:
+                states = None
+                break
+            states[int(d)] = s
+        if states is not None:
+            rt["rng"] = states
+    if st["manager"] is not None:
+        rt["manager"] = st["manager"].state_dict()
+    if store is not None:
+        rt["store"] = store.state_dict()
+    return rt

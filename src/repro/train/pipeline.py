@@ -57,7 +57,8 @@ class Prefetcher:
                  part_group_sizes: Optional[List[int]] = None,
                  workers: Optional[int] = None,
                  extra_summary: Optional[Callable[[], dict]] = None,
-                 telemetry=None):
+                 telemetry=None, start_step: int = 0,
+                 max_restarts: int = 0, fault_plan=None):
         """``limit`` bounds the total number of batches produced (the train
         loop passes its step count): without it the worker keeps building
         ahead until close(), so side effects in ``batch_fn`` — notably
@@ -104,7 +105,23 @@ class Prefetcher:
         spans around each step's build/pack and the refresh hook (on the
         prefetch thread) and around every ``get()`` (consumer thread),
         plus build-time and queue-dry histograms in the registry.  With
-        the default ``None`` not one telemetry instruction runs."""
+        the default ``None`` not one telemetry instruction runs.
+
+        ``start_step`` is the first step the worker builds (a resumed run
+        passes its checkpoint boundary so the batch sequence — and every
+        side effect of building it — continues instead of replaying from
+        0); ``limit`` still counts batches produced *from there*.
+
+        ``max_restarts`` bounds worker respawns: when the build thread
+        dies of an ordinary ``Exception`` a fresh thread re-enters the
+        loop at the *same* step (``self._step`` only advances on success,
+        and the injected-fault site sits before the hook/build consume
+        any RNG, so a respawned build replays nothing) — past the bound,
+        or on ``KeyboardInterrupt``-class failures, the exception
+        surfaces through ``get()``/``close()`` exactly as before.
+        ``fault_plan`` (a ``repro.train.resilience.FaultPlan``) injects
+        ``prefetch_build`` faults at the step boundary for tests and the
+        chaos bench."""
         if (batch_fn is None) == (part_fns is None):
             raise ValueError("pass exactly one of batch_fn / part_fns")
         self._batch_fn = batch_fn
@@ -131,8 +148,13 @@ class Prefetcher:
                       else None)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
-        self._step = 0
+        self._step = int(start_step)
+        self._start = int(start_step)
         self._limit = limit
+        self._max_restarts = int(max_restarts)
+        self._fault_plan = fault_plan
+        self.worker_deaths = 0
+        self.worker_restarts = 0
         self._hook = pre_batch_hook
         self._pack_fn = pack_fn
         self._extra_summary = extra_summary
@@ -174,43 +196,64 @@ class Prefetcher:
         return self._regroup([f.result() for f in futs])
 
     def _worker(self):
-        tele = self._tele
+        """Thread target: run the build loop, respawning (bounded) on an
+        ordinary Exception.  The loop re-enters at the step that failed —
+        ``self._step`` advances only after a successful build+enqueue, and
+        the injection site fires before the hook or build run, so a
+        respawned attempt replays no RNG draw and no accounting."""
         try:
-            while not self._stop.is_set():
-                if self._limit is not None and self._step >= self._limit:
-                    return
-                if self._hook is not None:
-                    if tele is not None:
-                        with tele.span("refresh_hook", step=self._step):
-                            self._hook(self._step)
-                    else:
+            self._worker_loop()
+        except Exception as e:
+            self.worker_deaths += 1
+            if (self.worker_restarts < self._max_restarts
+                    and not self._stop.is_set()):
+                self.worker_restarts += 1
+                t = threading.Thread(target=self._worker, daemon=True)
+                self._thread = t
+                t.start()
+            else:
+                self._exc = e  # surfaced on next get()/close()
+        except BaseException as e:  # never restarted (interpreter teardown)
+            self._exc = e
+
+    def _worker_loop(self):
+        tele = self._tele
+        while not self._stop.is_set():
+            if self._limit is not None \
+                    and self._step - self._start >= self._limit:
+                return
+            if self._fault_plan is not None:
+                self._fault_plan.raise_if("prefetch_build", step=self._step)
+            if self._hook is not None:
+                if tele is not None:
+                    with tele.span("refresh_hook", step=self._step):
                         self._hook(self._step)
+                else:
+                    self._hook(self._step)
+            t0 = time.perf_counter()
+            if tele is not None:
+                with tele.span("prefetch_build", step=self._step):
+                    batch = self._build(self._step)
+                self._h_build.observe(time.perf_counter() - t0)
+            else:
+                batch = self._build(self._step)
+            self._build_s += time.perf_counter() - t0
+            if self._pack_fn is not None:
                 t0 = time.perf_counter()
                 if tele is not None:
-                    with tele.span("prefetch_build", step=self._step):
-                        batch = self._build(self._step)
-                    self._h_build.observe(time.perf_counter() - t0)
-                else:
-                    batch = self._build(self._step)
-                self._build_s += time.perf_counter() - t0
-                if self._pack_fn is not None:
-                    t0 = time.perf_counter()
-                    if tele is not None:
-                        with tele.span("prefetch_pack", step=self._step):
-                            batch = self._pack_fn(batch)
-                    else:
+                    with tele.span("prefetch_pack", step=self._step):
                         batch = self._pack_fn(batch)
-                    self._pack_s += time.perf_counter() - t0
-                self._built += 1
-                self._step += 1
-                while not self._stop.is_set():
-                    try:
-                        self._q.put(batch, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-        except BaseException as e:  # surfaced on next get()/close()
-            self._exc = e
+                else:
+                    batch = self._pack_fn(batch)
+                self._pack_s += time.perf_counter() - t0
+            self._built += 1
+            self._step += 1
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
 
     def get(self, timeout: float = 60.0) -> dict:
         """Next prefetched batch.  Polls in short intervals so a worker
@@ -254,13 +297,16 @@ class Prefetcher:
         with a deep-enough queue and a fast-enough host phase it stays near
         zero, and any growth is directly attributable device idle time."""
         out = {"batches_built": self._built,
+               "gets": self._gets,
                "host_build_s_total": self._build_s,
                "host_build_s_mean": self._build_s / max(self._built, 1),
                "host_pack_s_total": self._pack_s,
                "host_pack_s_mean": self._pack_s / max(self._built, 1),
                "queue_dry_s_total": self._dry_s,
                "queue_dry_s_mean": self._dry_s / max(self._gets, 1),
-               "build_workers": self._workers}
+               "build_workers": self._workers,
+               "worker_deaths": self.worker_deaths,
+               "worker_restarts": self.worker_restarts}
         if self._extra_summary is not None:
             extra = self._extra_summary()
             clash = sorted(set(extra) & set(out))
@@ -273,16 +319,32 @@ class Prefetcher:
             out.update(extra)
         return out
 
-    def publish_metrics(self, reg) -> None:
+    def publish_metrics(self, reg, base: Optional[dict] = None) -> None:
         """Queue/build tallies for the telemetry registry (repro.obs),
         pulled at snapshot boundaries: totals mirror ``summary()`` (the
         per-observation histograms are fed live from the hot path when
-        telemetry is attached)."""
-        reg.counter("prefetch.batches_built").set_total(self._built)
-        reg.counter("prefetch.gets").set_total(self._gets)
-        reg.counter("prefetch.build_s").set_total(self._build_s)
-        reg.counter("prefetch.pack_s").set_total(self._pack_s)
-        reg.counter("prefetch.queue_dry_s").set_total(self._dry_s)
+        telemetry is attached).  ``base`` adds the folded totals of
+        *closed* predecessor prefetchers (the elastic remesh path replaces
+        the pipeline mid-run) so the registry counters stay monotonic
+        across the swap — keyed by ``summary()`` names."""
+        b = base or {}
+
+        def tot(key, v):
+            return v + b.get(key, 0)
+
+        reg.counter("prefetch.batches_built").set_total(
+            tot("batches_built", self._built))
+        reg.counter("prefetch.gets").set_total(tot("gets", self._gets))
+        reg.counter("prefetch.build_s").set_total(
+            tot("host_build_s_total", self._build_s))
+        reg.counter("prefetch.pack_s").set_total(
+            tot("host_pack_s_total", self._pack_s))
+        reg.counter("prefetch.queue_dry_s").set_total(
+            tot("queue_dry_s_total", self._dry_s))
+        reg.counter("fault.worker_deaths").set_total(
+            tot("worker_deaths", self.worker_deaths))
+        reg.counter("recovery.worker_restarts").set_total(
+            tot("worker_restarts", self.worker_restarts))
         reg.gauge("prefetch.queue_depth").set(self._q.qsize())
         reg.gauge("prefetch.build_workers").set(self._workers)
 
@@ -291,7 +353,11 @@ class Prefetcher:
         ``get()`` re-raises here — a failure in the final prefetched batches
         (or in a refresh hook) must not be silently swallowed at shutdown."""
         self._stop.set()
-        self._thread.join(timeout=5)
+        t = self._thread
+        t.join(timeout=5)
+        if self._thread is not t:
+            # a respawn raced the stop flag: join the replacement too
+            self._thread.join(timeout=5)
         if self._pool is not None:
             self._pool.shutdown(wait=False)
         if self._exc is not None and not self._exc_raised:
@@ -315,14 +381,18 @@ class LookaheadWindow:
     spec get its RNG-free ``fill_spec`` — with ``window`` batches of
     future knowledge banked.
 
-    ``limit`` caps sampling at the run's step count so the window never
-    draws (or accounts) steps nobody will consume — totals stay identical
-    to the unwindowed run.  One window per device part-fn: the Prefetcher
+    ``limit`` caps sampling at the run's final step (exclusive, absolute)
+    so the window never draws (or accounts) steps nobody will consume —
+    totals stay identical to the unwindowed run.  ``start`` is the first
+    step the window samples (a resumed run passes its checkpoint boundary
+    so the pre-sampling continues the journaled RNG sequence instead of
+    replaying from 0).  One window per device part-fn: the Prefetcher
     pool may run devices concurrently, but each window instance is only
     ever driven by its own device's strictly-sequential steps."""
 
     def __init__(self, builder, store, sample_fn: Callable[[int], object],
-                 window: int = 4, limit: Optional[int] = None, dev: int = 0):
+                 window: int = 4, limit: Optional[int] = None, dev: int = 0,
+                 start: int = 0):
         if window < 0:
             raise ValueError(f"window must be >= 0, got {window}")
         self.builder = builder
@@ -332,7 +402,7 @@ class LookaheadWindow:
         self.limit = limit
         self.dev = dev
         self._pending: deque = deque()  # (step, sampled spec) in step order
-        self._next = 0  # next step to sample
+        self._next = int(start)  # next step to sample
 
     def build(self, step: int):
         while (self._next <= step + self.window
@@ -379,3 +449,15 @@ class StragglerMonitor:
     def summary(self) -> dict:
         return {"steps": self.steps, "ewma_s": self.ewma,
                 "stragglers": self.stragglers, "worst_s": self.worst}
+
+    def publish_metrics(self, reg) -> None:
+        """Straggler verdicts for the telemetry registry (repro.obs):
+        flagged/observed step counters (monotonic, so windowed deltas
+        telescope) plus the EWMA and worst step time as gauges.  The
+        per-step time *histogram* is fed live by the train loop
+        (``step.time_s`` / ``straggler.step_time_s``); this mirror runs
+        only at snapshot boundaries."""
+        reg.counter("straggler.flagged").set_total(self.stragglers)
+        reg.counter("straggler.steps").set_total(self.steps)
+        reg.gauge("straggler.ewma_s").set(self.ewma or 0.0)
+        reg.gauge("straggler.worst_s").set(self.worst)

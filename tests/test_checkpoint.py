@@ -1,12 +1,19 @@
-"""Checkpoint roundtrip + atomicity + async writer."""
+"""Checkpoint roundtrip + atomicity + manifest validation + async writer."""
+import os
 import tempfile
 import time
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.train.checkpoint import (AsyncCheckpointer, latest_checkpoint,
-                                    restore_checkpoint, save_checkpoint)
+from repro.train.checkpoint import (AsyncCheckpointer, CheckpointError,
+                                    latest_checkpoint,
+                                    latest_resumable_checkpoint,
+                                    load_manifest, restore_checkpoint,
+                                    save_checkpoint, validate_checkpoint)
+from repro.train.resilience import (FaultPlan, FaultSpec,
+                                    InjectedCheckpointError)
 
 
 def _tree():
@@ -42,3 +49,118 @@ def test_async_checkpointer():
             time.sleep(0.05)
         ck.close()
         assert latest_checkpoint(d) is not None
+
+
+# ---- manifest + validation ---------------------------------------------
+
+
+def test_manifest_records_leaves_in_index_order():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 3, t)
+        m = load_manifest(path)
+        assert m["n_leaves"] == 2 and m["step"] == 3
+        assert m["leaves"][0] == {"dtype": "float32", "shape": [3, 4]}
+        assert m["leaves"][1] == {"dtype": "int32", "shape": [5]}
+        assert validate_checkpoint(path, like=t) == m
+
+
+def test_validate_rejects_torn_file():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 5, t)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)  # a crash mid-copy / torn write
+        with pytest.raises(CheckpointError, match="unreadable"):
+            validate_checkpoint(path)
+
+
+def test_validate_rejects_mismatched_template():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 5, t)
+        wrong_shape = {"a": jnp.zeros((2, 2)), "b": {"c": t["b"]["c"]}}
+        with pytest.raises(CheckpointError, match="leaf 0"):
+            validate_checkpoint(path, like=wrong_shape)
+        wrong_count = {"a": t["a"]}
+        with pytest.raises(CheckpointError, match="leaves"):
+            validate_checkpoint(path, like=wrong_count)
+        with pytest.raises(CheckpointError, match="leaf 0"):
+            restore_checkpoint(path, wrong_shape)
+
+
+def test_latest_resumable_skips_torn_newest():
+    """Resume must pick the newest checkpoint that actually loads — not
+    the newest filename (which may be a torn write from the crash that
+    triggered the resume)."""
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        good = save_checkpoint(d, 10, t)
+        bad = save_checkpoint(d, 20, t)
+        with open(bad, "r+b") as f:
+            f.truncate(os.path.getsize(bad) // 3)
+        assert latest_checkpoint(d) == bad        # filename order lies
+        assert latest_resumable_checkpoint(d, like=t) == good
+        # garbage that is not even a zip is skipped the same way
+        with open(os.path.join(d, "ckpt_00000030.npz"), "wb") as f:
+            f.write(b"not a checkpoint")
+        assert latest_resumable_checkpoint(d, like=t) == good
+
+
+def test_save_failure_leaves_no_partial_file():
+    """A crash between the tmp write and the publish must leave neither a
+    torn ckpt_* nor a stale tmp behind."""
+    t = _tree()
+
+    def boom(tmp_path):
+        assert os.path.exists(tmp_path)
+        raise OSError("disk gone")
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(OSError, match="disk gone"):
+            save_checkpoint(d, 4, t, fault_hook=boom)
+        assert os.listdir(d) == []
+
+
+def test_runtime_payload_roundtrip():
+    t = _tree()
+    runtime = {"rng": {0: {"state": 123}}, "devices": [0, 1],
+               "arr": np.arange(5)}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 9, t, runtime=runtime)
+        step, out, rt = restore_checkpoint(path, t, with_runtime=True)
+        assert step == 9 and rt["devices"] == [0, 1]
+        assert rt["rng"][0]["state"] == 123
+        np.testing.assert_array_equal(rt["arr"], runtime["arr"])
+        # without a runtime payload the 3-tuple form returns None
+        p2 = save_checkpoint(d, 10, t)
+        assert restore_checkpoint(p2, t, with_runtime=True)[2] is None
+
+
+# ---- async writer failure paths ----------------------------------------
+
+
+def test_async_retries_transient_write_failure():
+    t = _tree()
+    fp = FaultPlan([FaultSpec("checkpoint_write", at_call=0)])
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, retries=1, fault_plan=fp)
+        ck.save(1, t)
+        ck.close()  # must NOT raise: the retry succeeded
+        assert latest_checkpoint(d).endswith("ckpt_00000001.npz")
+        s = ck.summary()
+        assert s["saves"] == 1 and s["write_errors"] == 1
+        assert s["retries_used"] == 1
+
+
+def test_async_exhausted_failure_reraises_on_close():
+    t = _tree()
+    fp = FaultPlan([FaultSpec("checkpoint_write", at_call=0, times=5)])
+    with tempfile.TemporaryDirectory() as d:
+        ck = AsyncCheckpointer(d, retries=1, fault_plan=fp)
+        ck.save(1, t)
+        with pytest.raises(InjectedCheckpointError):
+            ck.close()
+        assert latest_checkpoint(d) is None  # nothing half-written
+        assert ck.summary()["write_errors"] == 2  # attempt + retry

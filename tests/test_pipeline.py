@@ -239,3 +239,91 @@ def test_summary_on_zero_batches():
     assert s["batches_built"] == 0
     assert s["host_build_s_mean"] == 0
     assert s["queue_dry_s_mean"] == 0
+
+
+# ---- fault harness: worker death, respawn, resume offset ---------------
+
+
+def test_start_step_offsets_the_build_sequence():
+    """A resumed run's Prefetcher starts at the checkpoint boundary: the
+    hook and the builds see real step numbers, not a replay from 0."""
+    seen = []
+    p = Prefetcher(lambda step: {"step": step}, depth=2, limit=3,
+                   pre_batch_hook=seen.append, start_step=10)
+    assert [p.get()["step"] for _ in range(3)] == [10, 11, 12]
+    p.close()
+    assert seen == [10, 11, 12]
+
+
+def test_injected_worker_death_respawns_same_step():
+    """An injected worker death is retried by a respawned thread at the
+    same step — the consumer sees every batch exactly once, and the
+    summary reports both the death and the restart."""
+    from repro.train.resilience import FaultPlan, FaultSpec
+
+    fp = FaultPlan([FaultSpec("prefetch_build", step=2)])
+    built = []
+
+    def fn(step):
+        built.append(step)
+        return {"step": step}
+
+    p = Prefetcher(fn, depth=2, limit=5, max_restarts=2, fault_plan=fp)
+    assert [p.get(timeout=10)["step"] for _ in range(5)] == list(range(5))
+    p.close()
+    assert built == [0, 1, 2, 3, 4]  # the fault fired before fn ran
+    s = p.summary()
+    assert s["worker_deaths"] == 1
+    assert s["worker_restarts"] == 1
+    assert s["gets"] == 5
+
+
+def test_organic_worker_death_respawns_and_retries():
+    """A build that dies of an ordinary exception is retried by the
+    respawned worker (same step); a second death exhausts the budget and
+    the original exception surfaces on get()."""
+    deaths = []
+
+    def fn(step):
+        if step == 1 and len(deaths) < 1:
+            deaths.append(step)
+            raise RuntimeError("transient build failure")
+        return {"step": step}
+
+    p = Prefetcher(fn, depth=2, limit=3, max_restarts=1)
+    assert [p.get(timeout=10)["step"] for _ in range(3)] == [0, 1, 2]
+    p.close()
+    assert p.summary()["worker_deaths"] == 1
+
+
+def test_worker_death_past_restart_budget_surfaces():
+    def bad(step):
+        raise RuntimeError("persistent failure")
+
+    p = Prefetcher(bad, depth=2, limit=4, max_restarts=2)
+    with pytest.raises(RuntimeError, match="persistent failure"):
+        p.get(timeout=10)
+    p.close()
+    s = p.summary()
+    assert s["worker_deaths"] == 3       # initial + 2 respawns
+    assert s["worker_restarts"] == 2
+    assert s["batches_built"] == 0
+
+
+def test_get_timeout_with_dead_worker_is_prompt():
+    """A worker that died past its budget must surface within ~a poll
+    tick even when the consumer blocked first (the timeout/worker-death
+    race under the fault harness)."""
+    from repro.train.resilience import FaultPlan, FaultSpec
+
+    fp = FaultPlan([FaultSpec("prefetch_build", step=0, times=3)])
+
+    def fn(step):
+        return {"step": step}
+
+    p = Prefetcher(fn, depth=2, limit=2, max_restarts=1, fault_plan=fp)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="injected prefetch_build"):
+        p.get(timeout=60.0)
+    assert time.monotonic() - t0 < 5.0
+    p.close()

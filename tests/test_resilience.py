@@ -1,0 +1,340 @@
+"""Fault injection + elastic recovery (repro.train.resilience).
+
+The claims under test, in the order the resilience layer makes them:
+
+* FaultPlan fires deterministically (by step, by call index, bounded by
+  ``times``) and its injections are typed, so recovery code can tell an
+  injected fault from an organic one;
+* every recovery leg is *bitwise transparent*: a run that hit (and
+  recovered from) injected worker deaths, SSD read errors/stalls and
+  checkpoint-write failures produces exactly the losses of a fault-free
+  run — faults fire at side-effect-free points, so retries replay
+  nothing;
+* preemption-safe resume: kill at step k, resume from the checkpoint,
+  and the stitched run equals the uninterrupted run loss-for-loss, bit
+  for bit — sampler RNG boundary states, online-manager hotness and
+  store residency all come back;
+* a simulated device loss re-meshes onto the survivors and the run
+  completes (recovery counters say so), or aborts when the policy is
+  ``"raise"``; exhausted worker restarts surface the original fault.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.cache_manager import OnlineCacheManager, RefreshConfig
+from repro.core.cliques import topology_matrix
+from repro.core.feature_store import FeatureStore, TieredStoreConfig
+from repro.core.planner import build_plan
+from repro.graph.csr import powerlaw_graph
+from repro.models.gnn import GNNConfig
+from repro.train.loop import train_gnn
+from repro.train.resilience import (FaultPlan, FaultSpec,
+                                    InjectedReadError, InjectedWorkerDeath,
+                                    ResilienceConfig,
+                                    topology_from_partition)
+
+FEAT = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = powerlaw_graph(3000, 8, seed=11, feat_dim=FEAT)
+    plan = build_plan(g, topology_matrix("nv2", 2), mem_per_device=300_000,
+                      batch_size=128, seed=0, fanouts=(4, 2))
+    return g, plan
+
+
+def _cfg(**kw):
+    base = dict(feat_dim=FEAT, hidden=16, batch_size=64, fanouts=(4, 2))
+    base.update(kw)
+    return GNNConfig(**base)
+
+
+# ---- FaultPlan semantics -----------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("gamma_ray")
+    with pytest.raises(ValueError, match="dev="):
+        FaultSpec("device_loss", step=3)
+    with pytest.raises(ValueError, match="stall_s"):
+        FaultSpec("ssd_stall", at_call=0)
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec("ssd_read", times=0)
+
+
+def test_fault_plan_fires_by_step_call_and_times():
+    plan = FaultPlan([FaultSpec("prefetch_build", step=3),
+                      FaultSpec("ssd_read", at_call=2, times=2)])
+    # step-keyed: only the matching step fires, once
+    for s in (0, 1, 2):
+        plan.raise_if("prefetch_build", step=s)
+    with pytest.raises(InjectedWorkerDeath):
+        plan.raise_if("prefetch_build", step=3)
+    plan.raise_if("prefetch_build", step=3)  # times=1: exhausted
+    # call-keyed: calls 0,1 pass; 2 and 3 raise (times=2); 4 passes
+    plan.raise_if("ssd_read")
+    plan.raise_if("ssd_read")
+    for _ in range(2):
+        with pytest.raises(InjectedReadError):
+            plan.raise_if("ssd_read")
+    plan.raise_if("ssd_read")
+    assert plan.summary() == {"injected_prefetch_build": 1,
+                              "injected_ssd_read": 2}
+
+
+def test_fault_plan_stall_sleeps():
+    plan = FaultPlan([FaultSpec("ssd_stall", at_call=0, stall_s=0.01)])
+    assert plan.sleep_if("ssd_stall") == pytest.approx(0.01)
+    assert plan.sleep_if("ssd_stall") == 0.0
+
+
+def test_topology_from_partition_is_block_diagonal(setup):
+    _, plan = setup
+    adj = topology_from_partition(plan.partition)
+    assert not adj.diagonal().any()
+    for c in plan.partition.cliques:
+        for a in c:
+            for b in c:
+                assert adj[a, b] == (a != b)
+    # cross-clique pairs are disconnected
+    cliques = plan.partition.cliques
+    if len(cliques) > 1:
+        assert not adj[cliques[0][0], cliques[1][0]]
+
+
+# ---- bitwise transparency of recovered faults --------------------------
+
+
+def test_faulty_run_bitwise_equals_clean(setup):
+    """Worker death (respawned) + checkpoint-write failure (retried):
+    the recovered run's losses match a fault-free run exactly, and the
+    result reports every injection and every recovery."""
+    g, plan = setup
+    cfg = _cfg()
+    clean = train_gnn(g, plan, cfg, steps=8, seed=3)
+    fp = FaultPlan([FaultSpec("prefetch_build", step=3),
+                    FaultSpec("checkpoint_write", at_call=0)])
+    with tempfile.TemporaryDirectory() as d:
+        r = train_gnn(g, plan, cfg, steps=8, seed=3, checkpoint_dir=d,
+                      checkpoint_every=4,
+                      resilience=ResilienceConfig(fault_plan=fp,
+                                                  worker_restarts=2,
+                                                  checkpoint_retries=1))
+    np.testing.assert_array_equal(clean.losses, r.losses)
+    assert r.resilience["faults"] == {"injected_prefetch_build": 1,
+                                      "injected_checkpoint_write": 1}
+    assert r.pipeline["worker_deaths"] == 1
+    assert r.pipeline["worker_restarts"] == 1
+    assert r.resilience["checkpoint"]["write_errors"] == 1
+    assert r.resilience["checkpoint"]["retries_used"] == 1
+    assert r.resilience["checkpoint"]["saves"] >= 2  # retried, not dropped
+
+
+def test_ssd_faults_bitwise_with_store(setup):
+    """Transient SSD read errors and a stall under the tiered store: the
+    retry path re-reads, rows stay bitwise identical, losses match the
+    fault-free store run."""
+    g, plan = setup
+    cfg = _cfg()
+    sc = TieredStoreConfig(host_rows=400, async_fills=False, lookahead=2)
+    clean = train_gnn(g, plan, cfg, steps=6, seed=5, feature_store=sc)
+    fp = FaultPlan([FaultSpec("ssd_read", at_call=3, times=2),
+                    FaultSpec("ssd_stall", at_call=8, stall_s=0.01)])
+    r = train_gnn(g, plan, cfg, steps=6, seed=5, feature_store=sc,
+                  resilience=ResilienceConfig(fault_plan=fp))
+    np.testing.assert_array_equal(clean.losses, r.losses)
+    assert r.store["read_errors"] == 2
+    assert r.store["read_retries"] == 2
+    assert r.store["stall_s"] >= clean.store["stall_s"]
+    assert r.resilience["faults"]["injected_ssd_read"] == 2
+    assert r.resilience["faults"]["injected_ssd_stall"] == 1
+
+
+def test_store_retry_exhaustion_propagates():
+    g = powerlaw_graph(500, 6, seed=2, feat_dim=8)
+    store = FeatureStore(g, TieredStoreConfig(host_rows=64, read_retries=1,
+                                              async_fills=False))
+    fp = FaultPlan([FaultSpec("ssd_read", at_call=0, times=5)])
+    store.source = fp.wrap_source(store.source)
+    with pytest.raises(InjectedReadError):
+        store.gather(np.arange(10, dtype=np.int64))
+    s = store.summary()
+    assert s["read_errors"] == 2       # first attempt + the one retry
+    assert s["read_retries"] == 1
+
+
+# ---- preemption-safe resume --------------------------------------------
+
+
+def test_kill_and_resume_bitwise(setup):
+    """Kill at step 6, resume: the stitched losses equal the uninterrupted
+    run bit for bit — the journaled RNG boundary state, the manager's
+    learned hotness and the store residency all came back."""
+    g, plan = setup
+    cfg = _cfg()
+    sc = TieredStoreConfig(host_rows=400, async_fills=False, lookahead=2)
+    full = train_gnn(g, plan, cfg, steps=12, seed=9, refresh_interval=4,
+                     feature_store=sc)
+    with tempfile.TemporaryDirectory() as d:
+        first = train_gnn(g, plan, cfg, steps=6, seed=9, refresh_interval=4,
+                          feature_store=sc, checkpoint_dir=d,
+                          checkpoint_every=3)
+        second = train_gnn(g, plan, cfg, steps=12, seed=9,
+                           refresh_interval=4, feature_store=sc,
+                           checkpoint_dir=d, resume=True)
+    np.testing.assert_array_equal(full.losses[:6], first.losses)
+    np.testing.assert_array_equal(full.losses[6:], second.losses)
+    assert second.steps == 6
+    assert second.resilience["resumed_from_step"] == 6
+    assert second.resilience["runtime_restored"] is True
+
+
+def test_resume_without_runtime_still_restores_params(setup):
+    """A checkpoint whose runtime payload is absent (pre-resilience file)
+    resumes params/step only — the old behavior, not an error."""
+    from repro.train.checkpoint import latest_checkpoint
+
+    g, plan = setup
+    cfg = _cfg()
+    with tempfile.TemporaryDirectory() as d:
+        r1 = train_gnn(g, plan, cfg, steps=4, seed=1, checkpoint_dir=d)
+        assert r1.steps == 4
+        # strip the runtime payload from the newest checkpoint in place
+        path = latest_checkpoint(d)
+        with np.load(path) as data:
+            arrays = {k: data[k] for k in data.files if k != "__runtime"}
+        with open(path, "wb") as f:
+            np.savez(f, **arrays)
+        r2 = train_gnn(g, plan, cfg, steps=6, seed=1, checkpoint_dir=d,
+                       resume=True)
+    assert r2.steps == 2
+    assert r2.resilience["resumed_from_step"] == 4
+    assert r2.resilience["runtime_restored"] is False
+
+
+# ---- degraded-clique re-meshing ----------------------------------------
+
+
+def test_device_loss_remeshes_and_continues():
+    g = powerlaw_graph(3000, 8, seed=11, feat_dim=FEAT)
+    plan = build_plan(g, topology_matrix("nv2", 4), mem_per_device=300_000,
+                      batch_size=128, seed=0, fanouts=(4, 2))
+    assert len(plan.partition.tablets) == 4
+    cfg = _cfg()
+    fp = FaultPlan([FaultSpec("device_loss", step=5, dev=3)])
+    r = train_gnn(g, plan, cfg, steps=10, seed=7, backend="device",
+                  resilience=ResilienceConfig(fault_plan=fp))
+    assert len(r.losses) == 10 and np.isfinite(r.losses).all()
+    assert r.resilience["remesh_events"] == 1
+    assert r.resilience["devices_lost"] == 1
+    assert r.resilience["events"][0]["step"] == 5
+    assert r.resilience["events"][0]["survivors"] == 3
+    assert r.resilience["faults"]["injected_device_loss"] == 1
+    # the loss actually dropped across the remesh (training continued)
+    assert np.mean(r.losses[-3:]) < np.mean(r.losses[:3])
+
+
+def test_device_loss_raise_policy_aborts(setup):
+    g, plan = setup
+    fp = FaultPlan([FaultSpec("device_loss", step=2,
+                              dev=plan.partition.cliques[-1][-1])])
+    with pytest.raises(RuntimeError, match="lost at step 2"):
+        train_gnn(g, plan, _cfg(), steps=5, seed=0,
+                  resilience=ResilienceConfig(fault_plan=fp,
+                                              on_device_loss="raise"))
+
+
+def test_device_loss_without_plan_rejected():
+    g = powerlaw_graph(500, 6, seed=2, feat_dim=FEAT)
+    fp = FaultPlan([FaultSpec("device_loss", step=1, dev=0)])
+    with pytest.raises(ValueError, match="LegionPlan"):
+        train_gnn(g, None, _cfg(), steps=3,
+                  resilience=ResilienceConfig(fault_plan=fp))
+
+
+def test_worker_restarts_exhausted_surfaces(setup):
+    """More consecutive worker deaths than the restart budget: the typed
+    injected fault propagates out of train_gnn unchanged."""
+    g, plan = setup
+    fp = FaultPlan([FaultSpec("prefetch_build", step=1, times=3)])
+    with pytest.raises(InjectedWorkerDeath):
+        train_gnn(g, plan, _cfg(), steps=5, seed=0,
+                  resilience=ResilienceConfig(fault_plan=fp,
+                                              worker_restarts=1))
+
+
+# ---- state_dict roundtrips ---------------------------------------------
+
+
+def test_cache_manager_state_roundtrip(setup):
+    g, plan = setup
+    rc = RefreshConfig(interval=4)
+    m1 = OnlineCacheManager(g, plan, rc)
+    obs = m1.observer_for(plan.partition.cliques[0][0])
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        obs.record([rng.integers(0, g.n, 16),
+                    rng.integers(0, g.n, 64)], (4, 2))
+    m1.on_step(4)  # fold the observations into the blended hotness
+    state = m1.state_dict()
+    m2 = OnlineCacheManager(g, plan, rc)
+    m2.load_state_dict(state, reapply=False)
+    for ci in range(len(state["blended"])):
+        b1, b2 = m1._blended[ci], m2._blended[ci]
+        np.testing.assert_array_equal(b1.H_T, b2.H_T)
+        np.testing.assert_array_equal(b1.H_F, b2.H_F)
+        assert b1.N_TSUM == b2.N_TSUM
+
+
+def test_cache_manager_restore_rejects_layout_change(setup):
+    g, plan = setup
+    rc = RefreshConfig(interval=4)
+    state = OnlineCacheManager(g, plan, rc).state_dict()
+    plan2 = build_plan(g, topology_matrix("nv2", 4),
+                       mem_per_device=300_000, batch_size=128, seed=0,
+                       fanouts=(4, 2))
+    with pytest.raises(ValueError, match="replan"):
+        OnlineCacheManager(g, plan2, rc).load_state_dict(state)
+
+
+def test_feature_store_state_roundtrip():
+    g = powerlaw_graph(800, 6, seed=3, feat_dim=8)
+    cfg = TieredStoreConfig(host_rows=128, async_fills=False)
+    s1 = FeatureStore(g, cfg)
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        s1.gather(rng.integers(0, g.n, 48).astype(np.int64))
+    state = s1.state_dict()
+    s2 = FeatureStore(g, cfg)
+    restored = s2.load_state_dict(state)
+    assert restored == len(state["ids"])
+    # the restored hot set serves from the host tier, bitwise intact
+    ids = np.asarray(state["ids"][:16], dtype=np.int64)
+    before = s2.summary()["host_hits"]
+    np.testing.assert_array_equal(s2.gather(ids), g.get_features(ids))
+    assert s2.summary()["host_hits"] - before == len(ids)
+
+
+# ---- telemetry integration ---------------------------------------------
+
+
+def test_fault_and_recovery_counters_reach_telemetry(tmp_path, setup):
+    from repro.obs import TelemetryConfig
+    from repro.obs.report import digest, load_stream
+
+    g, plan = setup
+    fp = FaultPlan([FaultSpec("prefetch_build", step=2)])
+    jsonl = str(tmp_path / "run.jsonl")
+    train_gnn(g, plan, _cfg(), steps=6, seed=0,
+              telemetry=TelemetryConfig(jsonl_path=jsonl, window=3,
+                                        jax_annotations=False),
+              resilience=ResilienceConfig(fault_plan=fp))
+    d = digest(load_stream(jsonl))
+    assert d["resilience"]["fault.injected_total"] == 1
+    assert d["resilience"]["fault.worker_deaths"] == 1
+    assert d["resilience"]["recovery.worker_restarts"] == 1
+    assert d["straggler"]["steps"] == 6
