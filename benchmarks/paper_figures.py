@@ -702,6 +702,22 @@ def bench_resilience() -> List[tuple]:
     return run_resilience(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
 
 
+def bench_serving() -> List[tuple]:
+    """Beyond-paper: online inference serving from the epoch-pinned
+    training caches — an open-loop Zipfian workload through GNNServer's
+    deadline batcher and fixed-shape fused gather/forward path, plus a
+    trainer-coexistence arm on a shared clique cache.  HARD gates: every
+    micro-batch's serving gather bitwise-equal to a host-oracle forward
+    at its pinned cache epoch, zero XLA retraces after warm-up across
+    every request size, serve.* window deltas telescoping exactly, and
+    training losses bitwise-unperturbed by concurrent serving.
+    Structured results land in BENCH_serving.json.  See
+    benchmarks/serving.py and docs/serving.md."""
+    from benchmarks.serving import run_serving
+
+    return run_serving(smoke=common.SMOKE, json_dir=common.BENCH_JSON_DIR)
+
+
 ALL_BENCHES = [
     ("fig2_cache_scalability", fig2_cache_scalability),
     ("fig3_hit_rate_balance", fig3_hit_rate_balance),
@@ -722,4 +738,5 @@ ALL_BENCHES = [
     ("topology_scaling", bench_topology_scaling),
     ("tiered_store", bench_tiered_store),
     ("resilience", bench_resilience),
+    ("serving", bench_serving),
 ]

@@ -1,0 +1,275 @@
+"""Online serving benchmark (the ``serving`` bench).
+
+An open-loop Zipfian workload against ``GNNServer`` on a 2-device nv2
+plan: request seed sets follow a Zipf popularity law over the vertices
+(skewed, cache-friendly — the regime the online cache manager optimizes
+for), request sizes mix across [1, max_batch], and arrivals follow an
+exponential inter-arrival clock that does NOT wait for replies (open
+loop: queueing delay is measured, not hidden).  A second arm runs a
+training loop alone and then again with a server hammering the same
+plan's shared clique cache, comparing loss trajectories.
+
+HARD gates (AssertionError -> ERROR row in run.py, what CI greps for):
+
+* **oracle parity** — every micro-batch's serving gather, forwarded at
+  its pinned cache epoch, is bitwise-equal to a host-mirror-assembled
+  oracle forward (``serve.oracle_mismatches == 0`` with every batch
+  checked);
+* **zero retraces** — after ``warmup()``, the full workload (every seed
+  count in [1, max_batch]) triggers not one XLA compile, pinned by a
+  ``jax.monitoring`` listener;
+* **exact telescoping** — summing every telemetry window's ``serve.*``
+  deltas reproduces the run-final totals, and those equal the server's
+  live tallies;
+* **trainer coexistence** — training losses with a concurrent server on
+  the shared cache are bitwise-equal to the serve-free run (refreshes
+  off on both sides, the documented coexistence mode).
+
+Latency rows report p50/p99 two ways — exact (np.percentile over raw
+per-request latencies) and interpolated (``Histogram.quantile`` over the
+telemetry stream's bucket counts) — plus sustained QPS and the per-tier
+hit-byte split.  Structured results land in ``BENCH_serving.json``; the
+telemetry stream in ``TELEM_serving.jsonl``.  Run standalone with
+``python benchmarks/serving.py [--smoke]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common  # noqa: E402
+
+FANOUTS = (5, 3)
+ZIPF_A = 1.3  # popularity skew of the request seeds
+
+
+def _params(smoke: bool):
+    # open-loop rate: modest enough that the queue drains on a CPU
+    # backend (this is a correctness/latency bench, not a load test),
+    # high enough that most flushes are size-triggered
+    if smoke:
+        return dict(n=4_000, deg=10, feat=32, max_batch=32, requests=150,
+                    rate_qps=100.0, train_steps=6)
+    return dict(n=12_000, deg=15, feat=64, max_batch=64, requests=600,
+                rate_qps=120.0, train_steps=20)
+
+
+def run_serving(smoke: bool = False, json_dir: str = None) -> List[tuple]:
+    import jax
+    import numpy as np
+
+    from repro.core.cliques import topology_matrix
+    from repro.core.planner import build_plan
+    from repro.graph.csr import powerlaw_graph
+    from repro.models.gnn import GNNConfig, defs as gnn_defs
+    from repro.models.params import init_from_defs
+    from repro.obs import (Telemetry, TelemetryConfig, quantile_from_counts,
+                           sum_counter_deltas, validate_stream)
+    from repro.serve import GNNServer, ServeConfig
+    from repro.train.loop import train_gnn
+
+    p = _params(smoke)
+    g = powerlaw_graph(p["n"], p["deg"], seed=4, feat_dim=p["feat"])
+
+    def fresh_plan():
+        return build_plan(g, topology_matrix("nv2"), mem_per_device=1_000_000,
+                          batch_size=p["max_batch"], seed=0, fanouts=FANOUTS)
+
+    cfg = GNNConfig(feat_dim=p["feat"], hidden=16,
+                    batch_size=p["max_batch"], fanouts=FANOUTS)
+    params = init_from_defs(gnn_defs(cfg), jax.random.PRNGKey(0))
+
+    # ---- arm 1: open-loop Zipfian serving, fully gated ------------------
+    jsonl_path, _ = common.telemetry_paths("serving")
+    os.makedirs(os.path.dirname(jsonl_path), exist_ok=True)
+    tele = Telemetry(TelemetryConfig(jsonl_path=jsonl_path, window=10,
+                                     run="serving", jax_annotations=False))
+    srv = GNNServer(g, fresh_plan(), cfg, params, dev=0,
+                    config=ServeConfig(max_batch=p["max_batch"],
+                                       max_wait_s=0.002, oracle_check=True,
+                                       snapshot_every=10),
+                    telemetry=tele)
+
+    compiles = {"on": False, "n": 0}
+
+    def _listener(event, _dur, **kw):
+        if compiles["on"] and event.startswith("/jax/core/compile"):
+            compiles["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    srv.warmup()
+    s_warm = srv.summary()
+    srv.start()
+
+    rng = np.random.default_rng(7)
+    # Zipf popularity over a fixed random permutation of the vertices:
+    # rank r -> perm[r], so the hot set is scattered across the id space
+    perm = rng.permutation(g.n)
+    sizes = np.concatenate([np.arange(1, p["max_batch"] + 1),
+                            rng.integers(1, p["max_batch"] + 1,
+                                         p["requests"] - p["max_batch"])])
+    gaps = rng.exponential(1.0 / p["rate_qps"], p["requests"])
+
+    def draw_seeds(k):
+        ranks = np.minimum(rng.zipf(ZIPF_A, k) - 1, g.n - 1)
+        return perm[ranks]
+
+    compiles["on"] = True
+    futs = []
+    t0 = time.perf_counter()
+    next_t = 0.0
+    for i in range(p["requests"]):
+        next_t += gaps[i]
+        lag = next_t - (time.perf_counter() - t0)
+        if lag > 0:  # open loop: never waits for replies, only the clock
+            time.sleep(lag)
+        futs.append(srv.submit(draw_seeds(int(sizes[i]))))
+    results = [f.result(timeout=300) for f in futs]
+    wall_s = time.perf_counter() - t0
+    compiles["on"] = False
+    srv.stop()
+    s = srv.summary()
+    tele.close(s["batches"])
+
+    # gate: oracle parity on every micro-batch
+    assert s["oracle_checks"] == s["batches"] > 0, s
+    assert s["oracle_mismatches"] == 0, (
+        f"{s['oracle_mismatches']}/{s['oracle_checks']} micro-batches "
+        "diverged bitwise from the host-oracle forward")
+
+    # gate: zero XLA compiles after warm-up across every request size
+    assert compiles["n"] == 0, (
+        f"{compiles['n']} XLA compiles after warm-up — the serving path "
+        "retraced")
+
+    lat = np.asarray([r.latency_s for r in results])
+    p50_ms = 1e3 * float(np.percentile(lat, 50))
+    p99_ms = 1e3 * float(np.percentile(lat, 99))
+    qps = len(results) / wall_s
+
+    # gate: serve.* window deltas telescope exactly to the live tallies
+    with open(jsonl_path) as f:
+        lines = [json.loads(ln) for ln in f]
+    validate_stream(lines)
+    snaps = [ln for ln in lines if ln["kind"] == "snapshot"]
+    final = {k: c["total"] for k, c in snaps[-1]["counters"].items()
+             if k.startswith("serve.")}
+    assert final, "no serve.* counters in the telemetry stream"
+    delta_sums = sum_counter_deltas(snaps, "serve.")
+    for key, total in final.items():
+        assert delta_sums[key] == total, (
+            f"window deltas for {key} sum to {delta_sums[key]}, "
+            f"run-final total is {total}")
+    live = {"serve.requests": s["requests"], "serve.replies": s["replies"],
+            "serve.batches": s["batches"], "serve.seeds": s["seeds"],
+            "serve.oracle_checks": s["oracle_checks"],
+            "serve.oracle_mismatches": s["oracle_mismatches"]}
+    for key, v in live.items():
+        assert final[key] == v, (
+            f"telemetry total {key}={final[key]} != live tally {v}")
+    h = snaps[-1]["hists"]["serve.latency_s"]
+    assert h["count"] == s["replies"]
+    hist_p50 = quantile_from_counts(h["edges"], h["counts"], 0.50)
+    hist_p99 = quantile_from_counts(h["edges"], h["counts"], 0.99)
+    tiers = {t: final[f"serve.hit_bytes{{tier={t}}}"]
+             for t in ("local", "peer", "pcie")}
+    assert sum(tiers.values()) > 0, "serving moved no feature bytes"
+
+    # ---- arm 2: trainer coexistence, bitwise-gated ----------------------
+    r_alone = train_gnn(g, fresh_plan(), cfg, steps=p["train_steps"], seed=0)
+    plan2 = fresh_plan()
+    srv2 = GNNServer(g, plan2, cfg, params, dev=0,
+                     config=ServeConfig(max_batch=p["max_batch"],
+                                        max_wait_s=0.001))
+    srv2.warmup()
+    srv2.start()
+    import threading
+    stop = threading.Event()
+
+    def client():
+        crng = np.random.default_rng(19)
+        while not stop.is_set():
+            srv2.submit(perm[np.minimum(
+                crng.zipf(ZIPF_A, int(crng.integers(1, p["max_batch"] + 1)))
+                - 1, g.n - 1)])
+            time.sleep(0.001)
+
+    th = threading.Thread(target=client)
+    th.start()
+    try:
+        r_coexist = train_gnn(g, plan2, cfg, steps=p["train_steps"], seed=0)
+    finally:
+        stop.set()
+        th.join()
+        srv2.stop()
+    served_during_training = srv2.summary()["replies"]
+    assert served_during_training > p["max_batch"], (
+        "coexistence arm served no real traffic — the gate is vacuous")
+    np.testing.assert_array_equal(
+        r_alone.losses, r_coexist.losses,
+        err_msg="concurrent serving perturbed the training losses")
+
+    batches_live = s["batches"] - s_warm["batches"]
+    deadline_share = s["flush_deadline"] / max(batches_live, 1)
+    payload = {
+        "smoke": smoke, "requests": p["requests"], "rate_qps": p["rate_qps"],
+        "max_batch": p["max_batch"], "fanouts": list(FANOUTS),
+        "zipf_a": ZIPF_A, "n_vertices": p["n"], "feat_dim": p["feat"],
+        "shape_cap": s["shape_cap"], "wall_s": wall_s, "qps": qps,
+        "p50_ms": p50_ms, "p99_ms": p99_ms,
+        "hist_p50_ms": 1e3 * hist_p50, "hist_p99_ms": 1e3 * hist_p99,
+        "batches": s["batches"], "seeds": s["seeds"],
+        "pad_seeds": s["pad_seeds"],
+        "flush_full": s["flush_full"], "flush_deadline": s["flush_deadline"],
+        "hit_bytes": tiers, "oracle_checks": s["oracle_checks"],
+        "coexist_replies": served_during_training,
+        "train_steps": p["train_steps"],
+    }
+    common.write_bench_json("serving", payload)
+
+    return [
+        ("serving/oracle_parity", 1,
+         f"{s['oracle_checks']} micro-batches bitwise == host-oracle "
+         "forward at the pinned epoch"),
+        ("serving/zero_retraces", 1,
+         f"0 XLA compiles over {p['requests']} requests after warm-up "
+         f"(one shape: cap={s['shape_cap']} ids)"),
+        ("serving/p50_ms", round(p50_ms, 3),
+         f"exact; histogram-interpolated {1e3 * hist_p50:.2f}"),
+        ("serving/p99_ms", round(p99_ms, 3),
+         f"exact; histogram-interpolated {1e3 * hist_p99:.2f}"),
+        ("serving/qps", round(qps, 1),
+         f"open loop at {p['rate_qps']:.0f} req/s offered"),
+        ("serving/window_sum_exact", 1,
+         f"{len(final)} serve counters, {len(snaps)} snapshots"),
+        ("serving/coexist_losses_bitwise_equal", 1,
+         f"{p['train_steps']} steps, {served_during_training} requests "
+         "served concurrently off the shared cache"),
+        ("serving/deadline_flush_share", round(deadline_share, 4),
+         "share of live micro-batches flushed by the max-wait deadline"),
+        ("serving/hit_bytes_local", tiers["local"], "HBM-resident rows"),
+        ("serving/hit_bytes_peer", tiers["peer"], "clique-peer rows"),
+        ("serving/hit_bytes_pcie", tiers["pcie"], "host-fill rows"),
+        ("serving/seeds_per_batch",
+         round(s["seeds"] / max(s["batches"], 1), 2),
+         f"max_batch={p['max_batch']}, padded to full shape"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for name, value, note in run_serving(smoke=args.smoke or common.SMOKE):
+        print(f"{name},{value},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,15 +36,15 @@ import time
 from typing import Callable, List, Optional, Tuple
 
 from repro.obs.metrics import (MetricsRegistry, TIME_EDGES_S, flat_name,
-                               sum_counter_deltas)
+                               quantile_from_counts, sum_counter_deltas)
 from repro.obs.schema import SCHEMA_VERSION, validate_line, validate_stream
 from repro.obs.sinks import ChromeTraceSink, JsonlSink
 from repro.obs.spans import OpenSpanTracker, Span
 
 __all__ = ["Telemetry", "TelemetryConfig", "MetricsRegistry", "Span",
            "activity_count", "flat_name", "maybe_span",
-           "sum_counter_deltas", "validate_line", "validate_stream",
-           "SCHEMA_VERSION", "TIME_EDGES_S"]
+           "quantile_from_counts", "sum_counter_deltas", "validate_line",
+           "validate_stream", "SCHEMA_VERSION", "TIME_EDGES_S"]
 
 # one shared, reusable, re-entrant no-op context: instrumentation sites use
 # ``with maybe_span(tele, ...)`` and a disabled run enters this singleton —

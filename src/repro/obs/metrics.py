@@ -69,6 +69,38 @@ class Gauge:
         self.value = float(value)
 
 
+def quantile_from_counts(edges: Sequence[float], counts: Sequence[int],
+                         q: float) -> Optional[float]:
+    """Quantile estimate from fixed-bucket cumulative-free counts (the
+    ``counts[i] tallies <= edges[i]`` layout, last bucket = +inf overflow)
+    by **linear interpolation within the containing bucket** — the
+    Prometheus ``histogram_quantile`` rule.  The first bucket interpolates
+    from 0 (durations are non-negative); the overflow bucket cannot be
+    interpolated and clamps to the largest finite edge.  Returns None for
+    an empty histogram.  Error is bounded by the containing bucket's
+    width (the reporter's p50/p99 columns and ``serve.latency_s`` gates
+    rely on exactly this bound)."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    total = sum(counts)
+    if total == 0:
+        return None
+    rank = q * total
+    cum = 0
+    for i, c in enumerate(counts):
+        if c == 0:
+            continue
+        below, cum = cum, cum + c
+        if cum >= rank:
+            if i >= len(edges):          # +inf overflow: no upper edge
+                return float(edges[-1])
+            lo = 0.0 if i == 0 else float(edges[i - 1])
+            hi = float(edges[i])
+            # rank == below (q at a bucket boundary) takes the lower edge
+            return lo + (hi - lo) * (max(rank, below) - below) / c
+    return float(edges[-1])
+
+
 class Histogram:
     """Fixed-bucket-edge histogram: ``counts[i]`` tallies observations
     ``<= edges[i]`` (last bucket is the +inf overflow).  ``observe`` takes
@@ -103,6 +135,13 @@ class Histogram:
             self.counts[b] += 1
             self.sum += value
             self.count += 1
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Linear-interpolated quantile over the fixed buckets (see
+        ``quantile_from_counts``); None while empty."""
+        with self._lock:
+            counts = list(self.counts)
+        return quantile_from_counts(self.edges, counts, q)
 
 
 class MetricsRegistry:

@@ -21,6 +21,7 @@ import json
 import sys
 from typing import Dict, List
 
+from repro.obs.metrics import quantile_from_counts
 from repro.obs.schema import TelemetrySchemaError, validate_line
 
 
@@ -96,6 +97,21 @@ def digest(lines: List[dict]) -> dict:
             "host_sample_syncs": delta("traffic.host_sample_syncs"),
         })
 
+    # every histogram in the final snapshot (cumulative counts), digested
+    # to p50/p99 by linear interpolation within the fixed buckets — the
+    # human-readable form of the latency/step-time/build-time tracks
+    histograms: Dict[str, dict] = {}
+    if snaps:
+        for key, h in snaps[-1].get("hists", {}).items():
+            count = h.get("count", sum(h["counts"]))
+            histograms[key] = {
+                "count": count,
+                "sum": h.get("sum", 0.0),
+                "mean": (h.get("sum", 0.0) / count) if count else None,
+                "p50": quantile_from_counts(h["edges"], h["counts"], 0.50),
+                "p99": quantile_from_counts(h["edges"], h["counts"], 0.99),
+            }
+
     dry_s = final_counters.get("prefetch.queue_dry_s", 0.0)
     refresh = {k.split(".", 1)[1]: v for k, v in final_counters.items()
                if k.startswith("refresh.")}
@@ -111,7 +127,7 @@ def digest(lines: List[dict]) -> dict:
                         else None),
         "wall_s": wall_s, "train_loop_s": loop_s,
         "queue_dry_s": dry_s,
-        "spans": by_name, "windows": windows,
+        "spans": by_name, "windows": windows, "histograms": histograms,
         "final_counters": final_counters, "refresh": refresh,
         "straggler": straggler, "resilience": resilience,
         "n_spans": len(spans), "n_snapshots": len(snaps),
@@ -159,6 +175,15 @@ def print_report(d: dict, out=None) -> None:
               f"{_fmt_mb(win['local_bytes'])}{_fmt_mb(win['peer_bytes'])}"
               f"{_fmt_mb(win['pcie_bytes'])}"
               f"{win['host_sample_syncs']:>11}\n")
+    if d.get("histograms"):
+        w("\nhistograms (interpolated quantiles):\n")
+        w(f"  {'histogram':<26}{'count':>8}{'mean ms':>10}{'p50 ms':>10}"
+          f"{'p99 ms':>10}\n")
+        for name, h in sorted(d["histograms"].items()):
+            def ms(v):
+                return "      --" if v is None else f"{1e3 * v:8.3f}"
+            w(f"  {name:<26}{h['count']:>8}{ms(h['mean']):>10}"
+              f"{ms(h['p50']):>10}{ms(h['p99']):>10}\n")
     if d["refresh"]:
         w("\nonline cache refresh: "
           + ", ".join(f"{k}={v:g}" for k, v in sorted(d["refresh"].items()))

@@ -1,0 +1,21 @@
+"""Online GNN inference serving from the epoch-pinned training caches.
+
+``GNNServer`` turns the training pipeline's device phase into a
+request-driven service: a deadline-aware admission batcher
+(:mod:`repro.serve.batcher`) packs seed-vertex requests into
+fixed-shape micro-batches; sampling/gathering runs through the same
+per-clique ``CliqueCache`` / sharded topology cache / ``FeatureStore``
+at a pinned cache epoch; a single jitted no-grad forward replies.  The
+path never retraces after warm-up and its gathers are bitwise-identical
+to a host-oracle forward (:mod:`repro.serve.oracle`) — both hard-gated
+by ``benchmarks/serving.py``.  See docs/serving.md.
+"""
+from repro.serve.batcher import (FLUSH_CLOSE, FLUSH_DEADLINE, FLUSH_FULL,
+                                 DeadlineBatcher, ServeRequest)
+from repro.serve.oracle import host_oracle_batch
+from repro.serve.server import (LATENCY_EDGES_S, GNNServer, ServeConfig,
+                                ServeResult)
+
+__all__ = ["GNNServer", "ServeConfig", "ServeResult", "DeadlineBatcher",
+           "ServeRequest", "host_oracle_batch", "LATENCY_EDGES_S",
+           "FLUSH_FULL", "FLUSH_DEADLINE", "FLUSH_CLOSE"]

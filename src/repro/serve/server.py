@@ -1,0 +1,413 @@
+"""`GNNServer`: low-latency online GNN inference from the training caches.
+
+The serving path is the training pipeline's device phase, request-driven:
+
+  submit(seeds)  any thread: admission queue (DeadlineBatcher)
+  serve loop     one thread, per micro-batch:
+                   [refresh?]  OnlineCacheManager.maybe_refresh — hot-set
+                               drift checks fed by *serving* traffic,
+                               serialized with the fill (same contract as
+                               the trainer's prefetch-hook barrier)
+                   sample      DeviceBatchBuilder.sample_spec — device
+                               topology-cache sampling, observer-tapped
+                               (serving accesses feed the same
+                               AccessAccumulator hotness as training)
+                   gather      fill_spec (pins the cache epoch) +
+                               finalize (fused gather+overlay, one jitted
+                               dispatch against the epoch-pinned table)
+                   forward     jitted GNN forward, no grads
+                   reply       slice logits per request, resolve futures
+
+**Never retraces after warm-up, by construction**: requests pad to
+exactly ``max_batch`` seeds (a designated pad vertex fills the tail), so
+every level tensor has one shape; and the builder's bucket quantum is
+set to the worst-case unique-vertex count ``max_batch * (1 + f1 + f1*f2
++ ...)``, so ``fill_spec``'s bucket rounding lands every spec on ONE
+``(id, miss)`` shape pair — the PR-4 stable-shape mechanism with a
+serve-sized bucket.  One fused-finalize compile, one forward compile,
+zero XLA activity afterwards (pinned by ``tests/test_serve.py`` and the
+``serving`` benchmark's hard gate).
+
+**Epoch-pinned reads**: ``fill_spec`` stamps the current cache epoch
+into the spec and ``finalize`` gathers from the double-buffered table of
+*that* epoch, so a refresh flipping the buffers mid-flight never tears a
+gather (one retained epoch of slack — the same contract the trainer's
+prefetch queue relies on).  The server's own refreshes run on the serve
+loop thread *between* batches, serialized with fills.  For
+trainer-coexistence (a background ``train_gnn`` sharing this plan's
+caches), run with refreshes disabled on both sides — reads are then
+epoch-stable by construction and training losses are bitwise
+unperturbed (gated in ``benchmarks/serving.py``).
+
+Telemetry: ``serve.*`` metrics (latency/queue-wait histograms, QPS
+counter, per-tier hit bytes, flush triggers) publish into the attached
+``Telemetry`` registry with the standard pull-at-snapshot idiom, and the
+whole path is span-instrumented (enqueue -> batch -> sample -> gather ->
+forward -> reply).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from functools import partial
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.planner import LegionPlan
+from repro.core.unified_cache import TrafficCounter
+from repro.graph.csr import CSRGraph
+from repro.models.gnn import GNNConfig, forward as gnn_forward
+from repro.obs import maybe_span
+from repro.serve.batcher import (FLUSH_DEADLINE, FLUSH_FULL, DeadlineBatcher,
+                                 ServeRequest)
+from repro.serve.oracle import host_oracle_batch
+from repro.train.batch import DeviceBatchBuilder
+
+# histogram edges for request latencies: 100us .. 3s (sub-ms buckets are
+# what p50 lands in once compiles are warm)
+LATENCY_EDGES_S = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0)
+
+_serve_forward = None  # built on first use (keeps jax import lazy)
+
+
+def _get_serve_forward():
+    """The no-grad inference dispatch: one jitted forward, static over the
+    (hashable, frozen) GNNConfig only — batch shapes are serve-stable, so
+    this compiles exactly once per server configuration
+    (``_serve_forward._cache_size()`` is the retrace-pin probe)."""
+    global _serve_forward
+    if _serve_forward is None:
+        import jax
+
+        @partial(jax.jit, static_argnames=("cfg",))
+        def serve_forward(cfg: GNNConfig, params, batch):
+            return gnn_forward(cfg, params, batch)
+
+        _serve_forward = serve_forward
+    return _serve_forward
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Batcher + serving knobs (see docs/serving.md for the tuning story).
+
+    ``max_batch``: seeds per micro-batch; every batch pads to exactly
+    this, so it is also the shape the compiled path is specialized to.
+    ``max_wait_s``: deadline for flushing a partial batch.
+    ``gather``: cached-row gather impl (auto|pallas|xla), as in training.
+    ``pad_vertex``: vertex id used to fill the seed tail (default: the
+    serving device's first tablet vertex) — padded rows sample and gather
+    like real traffic (keeping shapes fixed) but are never replied.
+    ``refresh_interval``: micro-batches between online-manager drift
+    checks (None = no serving-driven refreshes; required None when a
+    concurrent trainer shares the cache).
+    ``snapshot_every``: micro-batches between telemetry snapshots when a
+    Telemetry object is attached (0 = caller drives snapshots).
+    ``oracle_check``: after every gather, assemble the host-oracle batch
+    and forward at the same pinned epoch and compare logits bitwise —
+    the parity debug mode the serving benchmark gates with."""
+    max_batch: int = 64
+    max_wait_s: float = 0.005
+    gather: str = "auto"
+    pad_vertex: Optional[int] = None
+    refresh_interval: Optional[int] = None
+    snapshot_every: int = 25
+    oracle_check: bool = False
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.refresh_interval is not None and self.refresh_interval < 1:
+            raise ValueError("refresh_interval must be >= 1 or None")
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One request's reply: per-seed logits plus the latency breakdown."""
+    request_id: int
+    logits: np.ndarray        # (n_seeds, n_classes) float32
+    n_seeds: int
+    latency_s: float          # enqueue -> reply
+    queue_wait_s: float       # enqueue -> batch formation
+    batch_id: int
+    batch_seeds: int          # real seeds in the micro-batch served with
+    cache_epoch: int          # the pinned epoch the gather read
+
+
+class GNNServer:
+    """Request-driven inference server over one device's view of a
+    ``LegionPlan``'s unified cache (see module doc).
+
+    Lifecycle: construct, ``warmup()`` (compiles the one serve shape),
+    ``start()``, ``submit(seeds)`` from anywhere, ``stop()``.  The server
+    never closes a caller-provided Telemetry; it only snapshots into it.
+    """
+
+    def __init__(self, g: CSRGraph, plan: LegionPlan, cfg: GNNConfig,
+                 params, *, dev: int = 0,
+                 config: Optional[ServeConfig] = None,
+                 counter: Optional[TrafficCounter] = None,
+                 telemetry=None, manager=None, feature_store=None,
+                 seed: int = 0):
+        self.g = g
+        self.plan = plan
+        self.cfg = cfg
+        self.params = params
+        self.dev = dev
+        self.config = config or ServeConfig()
+        if self.config.refresh_interval is not None and manager is None:
+            raise ValueError("refresh_interval needs an OnlineCacheManager "
+                             "(pass manager=)")
+        self.counter = (counter if counter is not None
+                        else TrafficCounter.for_plan(plan))
+        self.telemetry = telemetry
+        self.manager = manager
+        cache = plan.cache_for_device(dev)
+        # worst-case unique-vertex count of a full batch: every slot of
+        # every level distinct.  Using it as the builder's bucket quantum
+        # collapses every spec onto ONE (id, miss) shape pair — the PR-4
+        # stable-shape mechanism, serve-sized (see module doc).
+        slots = 1
+        cap = 1
+        for f in cfg.fanouts:
+            slots *= f
+            cap += slots
+        self.shape_cap = self.config.max_batch * cap
+        self._builder = DeviceBatchBuilder(
+            g, cache, cfg.fanouts, self.counter, dev,
+            gather=self.config.gather, bucket=self.shape_cap,
+            observer=(manager.observer_for(dev) if manager is not None
+                      else None))
+        self._builder.telemetry = telemetry
+        self._builder.store = feature_store
+        if self.config.pad_vertex is not None:
+            self._pad_vertex = int(self.config.pad_vertex)
+        else:
+            tablet = plan.partition.tablets.get(dev)
+            self._pad_vertex = int(tablet[0]) if tablet is not None \
+                and len(tablet) else 0
+        self._rng = np.random.default_rng(seed)
+        self.batcher = DeadlineBatcher(self.config.max_batch,
+                                       self.config.max_wait_s)
+        self._thread: Optional[threading.Thread] = None
+        # serializes fill/finalize with serving-driven refreshes (both run
+        # on the loop thread anyway; the lock makes the contract explicit
+        # and lets tests drive the race deliberately)
+        self._epoch_lock = threading.RLock()
+        # ---- serve.* tallies (ints; mirrored monotonically at publish) --
+        self._m_lock = threading.Lock()
+        self._requests = 0
+        self._replies = 0
+        self._batches = 0
+        self._seeds = 0
+        self._pad_seeds = 0
+        self._flushes = {FLUSH_FULL: 0, FLUSH_DEADLINE: 0}
+        self._oracle_checks = 0
+        self._oracle_mismatches = 0
+        self._forward_us = 0          # integer us so window deltas are exact
+        if telemetry is not None:
+            self._h_latency = telemetry.registry.histogram(
+                "serve.latency_s", edges=LATENCY_EDGES_S)
+            self._h_wait = telemetry.registry.histogram(
+                "serve.queue_wait_s", edges=LATENCY_EDGES_S)
+            telemetry.add_source("serve", self.publish_metrics)
+
+    # ---- client API ----------------------------------------------------
+    def submit(self, seeds: np.ndarray):
+        """Admit one request (thread-safe); returns a Future[ServeResult].
+        The enqueue span is the latency clock's start."""
+        with maybe_span(self.telemetry, "serve_enqueue", dev=self.dev):
+            fut = self.batcher.submit(seeds)
+        with self._m_lock:
+            self._requests += 1
+        return fut
+
+    def start(self) -> None:
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._run, name="serve-loop",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop admitting, drain queued requests, join the loop thread."""
+        self.batcher.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def warmup(self, rounds: int = 2) -> None:
+        """Serve ``rounds`` synthetic full batches through the real path
+        (compiles the single fused-finalize and forward shapes).  Call
+        before ``start``; after this, the request-size distribution
+        cannot trigger another XLA compile."""
+        for _ in range(rounds):
+            req = ServeRequest(
+                rid=-1, seeds=np.full(self.config.max_batch,
+                                      self._pad_vertex, dtype=np.int64),
+                future=Future(), t_enqueue=time.perf_counter())
+            with self._m_lock:
+                self._requests += 1  # keep requests == replies invariant
+            self._serve_batch([req], FLUSH_FULL)
+            req.future.result()
+
+    # ---- the serve loop ------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            nxt = self.batcher.next_batch()
+            if nxt is None:
+                return
+            reqs, trigger = nxt
+            try:
+                self._serve_batch(reqs, trigger)
+            except Exception as e:  # resolve futures; keep serving
+                for r in reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+
+    def _maybe_refresh(self, batch_id: int) -> None:
+        ri = self.config.refresh_interval
+        if self.manager is None or ri is None or batch_id == 0:
+            return
+        if batch_id % ri == 0:
+            with maybe_span(self.telemetry, "serve_refresh",
+                            batch=batch_id):
+                with self._epoch_lock:
+                    self.manager.maybe_refresh(batch_id)
+
+    def _serve_batch(self, reqs: List[ServeRequest], trigger: str) -> None:
+        tele = self.telemetry
+        t_batch = time.perf_counter()
+        with self._m_lock:
+            batch_id = self._batches
+            self._batches += 1
+            if trigger in self._flushes:
+                self._flushes[trigger] += 1
+        self._maybe_refresh(batch_id)
+        with maybe_span(tele, "serve_batch", batch=batch_id,
+                        requests=len(reqs)):
+            real = np.concatenate([r.seeds for r in reqs])
+            n_real = len(real)
+            n_pad = self.config.max_batch - n_real
+            seeds = np.full(self.config.max_batch, self._pad_vertex,
+                            dtype=np.int64)
+            seeds[:n_real] = real
+            with maybe_span(tele, "serve_sample", batch=batch_id):
+                spec = self._builder.sample_spec(seeds, self._rng)
+            with maybe_span(tele, "serve_gather", batch=batch_id):
+                # one locked region for fill -> oracle -> finalize: the
+                # host mirror tracks the *live* epoch, so the oracle must
+                # read it before any refresh moves past the spec's pinned
+                # epoch; and at most one flip may land between fill and
+                # finalize (the double buffer retains a single epoch)
+                with self._epoch_lock:
+                    spec = self._builder.fill_spec(spec)
+                    epoch = spec.cache_epoch
+                    oracle = None
+                    if self.config.oracle_check:
+                        # must also run before finalize releases staging
+                        oracle = host_oracle_batch(
+                            spec, self._builder.cache, self.g.feat_dim)
+                    batch = self._builder.finalize(spec)
+            with maybe_span(tele, "serve_forward", batch=batch_id):
+                t_fwd = time.perf_counter_ns()
+                logits = _get_serve_forward()(self.cfg, self.params, batch)
+                logits.block_until_ready()
+                fwd_us = (time.perf_counter_ns() - t_fwd) // 1000
+            if oracle is not None:
+                self._check_oracle(oracle, logits)
+            with maybe_span(tele, "serve_reply", batch=batch_id):
+                logits_np = np.asarray(logits)
+                t_reply = time.perf_counter()
+                off = 0
+                for r in reqs:
+                    n = len(r.seeds)
+                    res = ServeResult(
+                        request_id=r.rid,
+                        logits=logits_np[off:off + n],
+                        n_seeds=n,
+                        latency_s=t_reply - r.t_enqueue,
+                        queue_wait_s=t_batch - r.t_enqueue,
+                        batch_id=batch_id, batch_seeds=n_real,
+                        cache_epoch=epoch)
+                    off += n
+                    if tele is not None:
+                        self._h_latency.observe(res.latency_s)
+                        self._h_wait.observe(res.queue_wait_s)
+                    r.future.set_result(res)
+        with self._m_lock:
+            self._replies += len(reqs)
+            self._seeds += n_real
+            self._pad_seeds += n_pad
+            self._forward_us += fwd_us
+        if tele is not None and self.config.snapshot_every \
+                and (batch_id + 1) % self.config.snapshot_every == 0:
+            tele.snapshot(batch_id + 1)
+
+    def _check_oracle(self, oracle: Dict[str, np.ndarray], logits) -> None:
+        """Bitwise parity: the host-oracle batch through the same jitted
+        forward must reproduce the serving logits exactly."""
+        import jax.numpy as jnp
+
+        ob = {k: jnp.asarray(v) for k, v in oracle.items()}
+        ologits = _get_serve_forward()(self.cfg, self.params, ob)
+        ok = bool(np.array_equal(np.asarray(ologits), np.asarray(logits)))
+        with self._m_lock:
+            self._oracle_checks += 1
+            if not ok:
+                self._oracle_mismatches += 1
+
+    # ---- telemetry -----------------------------------------------------
+    def publish_metrics(self, reg) -> None:
+        """Mirror the serve tallies into a MetricsRegistry (pulled at
+        snapshot boundaries — the TrafficCounter idiom).  All totals are
+        integers, so window deltas telescope exactly; the per-tier hit
+        bytes split the serve counter's byte matrix the same way
+        ``TrafficCounter.publish_metrics`` does."""
+        with self._m_lock:
+            scalars = {
+                "serve.requests": self._requests,
+                "serve.replies": self._replies,
+                "serve.batches": self._batches,
+                "serve.seeds": self._seeds,
+                "serve.pad_seeds": self._pad_seeds,
+                "serve.flush_full": self._flushes[FLUSH_FULL],
+                "serve.flush_deadline": self._flushes[FLUSH_DEADLINE],
+                "serve.oracle_checks": self._oracle_checks,
+                "serve.oracle_mismatches": self._oracle_mismatches,
+                "serve.forward_us": self._forward_us,
+            }
+        for name, v in scalars.items():
+            reg.counter(name).set_total(int(v))
+        with self.counter.lock:
+            bm = self.counter.bytes_matrix.copy()
+            freq = self.counter.feature_requests
+            fhit = self.counter.feature_hits
+        dev_part = bm[:, :-1]
+        reg.counter("serve.hit_bytes", tier="local").set_total(
+            int(np.trace(dev_part)))
+        reg.counter("serve.hit_bytes", tier="peer").set_total(
+            int(dev_part.sum() - np.trace(dev_part)))
+        reg.counter("serve.hit_bytes", tier="pcie").set_total(
+            int(bm[:, -1].sum()))
+        reg.counter("serve.feature_requests").set_total(int(freq))
+        reg.counter("serve.feature_hits").set_total(int(fhit))
+        reg.gauge("serve.queue_depth").set(self.batcher.depth)
+
+    def summary(self) -> dict:
+        """Live tallies (the benchmark's cross-check against telemetry)."""
+        with self._m_lock:
+            return {
+                "requests": self._requests, "replies": self._replies,
+                "batches": self._batches, "seeds": self._seeds,
+                "pad_seeds": self._pad_seeds,
+                "flush_full": self._flushes[FLUSH_FULL],
+                "flush_deadline": self._flushes[FLUSH_DEADLINE],
+                "oracle_checks": self._oracle_checks,
+                "oracle_mismatches": self._oracle_mismatches,
+                "forward_us": self._forward_us,
+                "shape_cap": self.shape_cap,
+            }

@@ -84,6 +84,36 @@ def test_histogram_edge_validation():
         reg.histogram("h", edges=(1.0, 3.0))
 
 
+def test_histogram_quantile_against_numpy():
+    """Interpolated bucket quantiles track np.percentile to within the
+    containing bucket's width (the best a histogram can promise)."""
+    edges = tuple(float(e) for e in np.linspace(0.1, 10.0, 34))
+    h = Histogram(edges)
+    rng = np.random.default_rng(7)
+    samples = rng.gamma(shape=2.0, scale=1.5, size=5000).clip(0.01, 9.9)
+    for v in samples:
+        h.observe(float(v))
+    for q in (0.01, 0.25, 0.50, 0.75, 0.90, 0.99):
+        got = h.quantile(q)
+        want = float(np.percentile(samples, 100 * q))
+        i = int(np.searchsorted(np.asarray(edges), want))
+        lo = 0.0 if i == 0 else edges[i - 1]
+        hi = edges[min(i, len(edges) - 1)]
+        assert abs(got - want) <= (hi - lo) + 1e-9, (q, got, want)
+
+
+def test_histogram_quantile_edge_cases():
+    h = Histogram((1.0, 2.0))
+    assert h.quantile(0.5) is None  # empty
+    h.observe(0.5)
+    assert h.quantile(0.0) == pytest.approx(0.0)   # interpolates from 0
+    assert h.quantile(1.0) == pytest.approx(1.0)   # top of first bucket
+    h.observe(100.0)  # +inf overflow bucket has no upper edge:
+    assert h.quantile(1.0) == pytest.approx(2.0)   # clamps to last edge
+    with pytest.raises(ValueError, match="quantile"):
+        h.quantile(1.5)
+
+
 def test_sum_counter_deltas_filters_by_prefix():
     snaps = [{"counters": {"a.x": {"total": 1, "delta": 1},
                            "b.y": {"total": 2, "delta": 2}}},
@@ -342,3 +372,19 @@ def test_digest_queue_dry_and_spans(run):
     assert d["spans"]["device_step"]["count"] == 10
     assert d["train_loop_s"] > 0
     assert d["queue_dry_s"] >= 0
+
+
+def test_reporter_prints_histogram_quantiles(run, capsys):
+    """Every histogram in the stream shows up in the digest and the
+    human report with interpolated p50/p99."""
+    _, _, jsonl, _ = run
+    d = digest(load_stream(jsonl))
+    assert "step.time_s" in d["histograms"]
+    h = d["histograms"]["step.time_s"]
+    assert h["count"] == 10
+    assert h["p50"] is not None and h["p99"] is not None
+    assert h["p50"] <= h["p99"]
+    assert report_main([jsonl]) == 0
+    out = capsys.readouterr().out
+    assert "histograms (interpolated quantiles)" in out
+    assert "step.time_s" in out

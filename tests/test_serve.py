@@ -1,0 +1,352 @@
+"""Online serving (repro.serve): deadline batcher semantics, bitwise
+host-oracle parity of the epoch-pinned serving gather, the
+zero-retrace-after-warmup pin, refresh-vs-gather race stability, serve.*
+metric telescoping, and trainer-coexistence bitwise neutrality."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cliques import topology_matrix
+from repro.core.planner import build_plan
+from repro.graph.csr import powerlaw_graph
+from repro.models.gnn import GNNConfig, defs as gnn_defs
+from repro.models.params import init_from_defs
+from repro.obs import Telemetry, TelemetryConfig, sum_counter_deltas
+from repro.serve import (FLUSH_CLOSE, FLUSH_DEADLINE, FLUSH_FULL,
+                         DeadlineBatcher, GNNServer, ServeConfig,
+                         host_oracle_batch)
+from repro.serve.server import _get_serve_forward
+from repro.train.batch import DeviceBatchBuilder
+
+FANOUTS = (5, 3)
+MAX_BATCH = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = powerlaw_graph(4000, 10, seed=4, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=1_000_000,
+                      batch_size=MAX_BATCH, fanouts=FANOUTS, seed=0)
+    cfg = GNNConfig(feat_dim=32, hidden=16, batch_size=MAX_BATCH,
+                    fanouts=FANOUTS)
+    import jax
+    params = init_from_defs(gnn_defs(cfg), jax.random.PRNGKey(0))
+    return g, plan, cfg, params
+
+
+def _server(setup, **kw):
+    g, plan, cfg, params = setup
+    defaults = dict(max_batch=MAX_BATCH, max_wait_s=0.002)
+    defaults.update(kw.pop("config", {}))
+    return GNNServer(g, plan, cfg, params, dev=0,
+                     config=ServeConfig(**defaults), **kw)
+
+
+# ---------------- batcher ----------------
+
+def test_batcher_full_flush_packs_fifo():
+    b = DeadlineBatcher(max_batch=8, max_wait_s=10.0)
+    for n in (3, 3, 2, 5):
+        b.submit(np.arange(n))
+    reqs, trigger = b.next_batch()  # immediate: queue fills a batch
+    assert trigger == FLUSH_FULL
+    assert [len(r.seeds) for r in reqs] == [3, 3, 2]
+    assert b.depth == 1  # the 5-seed request did not fit and waits
+
+
+def test_batcher_flushes_early_when_next_request_wont_fit():
+    # 6+5 > 8: waiting for the deadline cannot help, flush the 6 now
+    b = DeadlineBatcher(max_batch=8, max_wait_s=10.0)
+    b.submit(np.arange(6))
+    b.submit(np.arange(5))
+    t0 = time.perf_counter()
+    reqs, trigger = b.next_batch()
+    assert time.perf_counter() - t0 < 1.0
+    assert trigger == FLUSH_FULL and len(reqs) == 1
+    assert len(reqs[0].seeds) == 6
+
+
+def test_batcher_deadline_flush():
+    b = DeadlineBatcher(max_batch=64, max_wait_s=0.02)
+    b.submit(np.arange(3))
+    t0 = time.perf_counter()
+    reqs, trigger = b.next_batch()
+    waited = time.perf_counter() - t0
+    assert trigger == FLUSH_DEADLINE
+    assert len(reqs) == 1 and waited >= 0.015
+
+
+def test_batcher_close_drains_then_ends():
+    b = DeadlineBatcher(max_batch=64, max_wait_s=10.0)
+    b.submit(np.arange(2))
+    b.close()
+    reqs, trigger = b.next_batch()
+    assert trigger == FLUSH_CLOSE and len(reqs) == 1
+    assert b.next_batch() is None
+    with pytest.raises(RuntimeError, match="closed"):
+        b.submit(np.arange(1))
+
+
+def test_batcher_rejects_unpackable_requests():
+    b = DeadlineBatcher(max_batch=4, max_wait_s=1.0)
+    with pytest.raises(ValueError, match="empty"):
+        b.submit(np.asarray([], dtype=np.int64))
+    with pytest.raises(ValueError, match="max_batch"):
+        b.submit(np.arange(5))
+
+
+# ---------------- parity: serving gather == host oracle ----------------
+
+def test_device_spec_matches_host_oracle_bitwise(setup):
+    """The core parity claim, tested directly on the builder: a filled
+    spec's host-oracle batch through the jitted forward reproduces the
+    fused device gather's logits bitwise."""
+    import jax.numpy as jnp
+
+    g, plan, cfg, params = setup
+    cache = plan.cache_for_device(0)
+    b = DeviceBatchBuilder(g, cache, FANOUTS, None, 0)
+    rng = np.random.default_rng(3)
+    fwd = _get_serve_forward()
+    for _ in range(3):
+        seeds = rng.integers(0, g.n, MAX_BATCH)
+        spec = b.fill_spec(b.sample_spec(seeds, rng))
+        oracle = host_oracle_batch(spec, cache, g.feat_dim)  # pre-finalize
+        logits = fwd(cfg, params, b.finalize(spec))
+        ologits = fwd(cfg, params,
+                      {k: jnp.asarray(v) for k, v in oracle.items()})
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      np.asarray(ologits))
+
+
+def test_server_oracle_check_mode(setup):
+    srv = _server(setup, config={"oracle_check": True})
+    srv.warmup()
+    s0 = srv.summary()
+    srv.start()
+    rng = np.random.default_rng(5)
+    futs = [srv.submit(rng.integers(0, setup[0].n,
+                                    rng.integers(1, MAX_BATCH + 1)))
+            for _ in range(20)]
+    res = [f.result(timeout=60) for f in futs]
+    srv.stop()
+    s = srv.summary()
+    assert s["oracle_checks"] == s["batches"] > 0
+    assert s["oracle_mismatches"] == 0
+    assert sum(r.n_seeds for r in res) == s["seeds"] - s0["seeds"]
+    assert all(r.logits.shape == (r.n_seeds, setup[2].n_classes)
+               for r in res)
+    assert all(r.latency_s >= r.queue_wait_s >= 0 for r in res)
+
+
+# ---------------- zero retraces after warm-up ----------------
+
+def test_serving_zero_retraces_after_warmup(setup):
+    """200 requests with every seed count in [1, max_batch] trigger not a
+    single XLA compile after warm-up: one forward shape, one fused
+    gather shape (the shape_cap bucket collapses every spec)."""
+    import jax
+
+    compiles = {"on": False, "n": 0}
+
+    def _listener(event, _dur, **kw):
+        if compiles["on"] and event.startswith("/jax/core/compile"):
+            compiles["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    srv = _server(setup)
+    srv.warmup()
+    srv.start()
+    rng = np.random.default_rng(11)
+    sizes = np.concatenate([np.arange(1, MAX_BATCH + 1),
+                            rng.integers(1, MAX_BATCH + 1, 168)])
+    compiles["on"] = True
+    try:
+        futs = [srv.submit(rng.integers(0, setup[0].n, int(n)))
+                for n in sizes]
+        for f in futs:
+            f.result(timeout=120)
+    finally:
+        compiles["on"] = False
+        srv.stop()
+    assert len(futs) == 200
+    assert compiles["n"] == 0, (
+        f"{compiles['n']} XLA compiles after warm-up")
+
+
+# ---------------- epoch pinning vs refresh ----------------
+
+def _churn(cache, rng, n_swap=8):
+    """One refresh epoch: evict n_swap resident ids, admit n_swap
+    uncached ones (rows uploaded to the new epoch's table only)."""
+    evict = cache.feat_ids[rng.integers(0, len(cache.feat_ids),
+                                        n_swap)].copy()
+    evict = np.unique(evict)
+    admit = np.setdiff1d(np.arange(cache.g.n), cache.feat_ids)[:len(evict)]
+    cache.begin_epoch()
+    cache.apply_feature_delta(evict, admit,
+                              np.zeros(len(admit), np.int32))
+
+
+def test_refresh_mid_flight_does_not_tear_pinned_gather(setup):
+    """Satellite regression: a cache refresh flipping the double buffer
+    *between fill and finalize* leaves the epoch-pinned gather bitwise
+    intact — finalize reads the retained epoch's table, not the fresh
+    one."""
+    import jax.numpy as jnp
+
+    g = powerlaw_graph(3000, 8, seed=21, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=500_000,
+                      batch_size=MAX_BATCH, fanouts=FANOUTS, seed=0)
+    _, _, cfg, params = setup
+    cache = plan.cache_for_device(0)
+    cache.device_arrays()  # materialize so begin_epoch retains a snapshot
+    b = DeviceBatchBuilder(g, cache, FANOUTS, None, 0)
+    rng = np.random.default_rng(13)
+    spec = b.fill_spec(b.sample_spec(rng.integers(0, g.n, MAX_BATCH), rng))
+    e0 = spec.cache_epoch
+    oracle = host_oracle_batch(spec, cache, g.feat_dim)  # mirror still @ e0
+    _churn(cache, rng, n_swap=16)  # the mid-flight buffer flip
+    assert cache.epoch == e0 + 1
+    # the flip really changed the live table relative to the pinned one
+    assert not np.array_equal(
+        np.asarray(cache.device_arrays()["feat_cache"]),
+        np.asarray(cache.device_arrays(e0)["feat_cache"]))
+    fwd = _get_serve_forward()
+    logits = fwd(cfg, params, b.finalize(spec))  # gathers the e0 table
+    ologits = fwd(cfg, params,
+                  {k: jnp.asarray(v) for k, v in oracle.items()})
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ologits))
+
+
+def test_concurrent_refresh_race_is_bitwise_stable(setup):
+    """A refresher thread hammering begin_epoch/apply_feature_delta
+    (under the server's epoch lock, the serialization contract) while
+    requests stream through never produces an oracle mismatch, and the
+    served epochs actually advance across the run."""
+    g = powerlaw_graph(3000, 8, seed=22, feat_dim=32)
+    plan = build_plan(g, topology_matrix("nv2"), mem_per_device=500_000,
+                      batch_size=MAX_BATCH, fanouts=FANOUTS, seed=0)
+    _, _, cfg, params = setup
+    srv = GNNServer(g, plan, cfg, params, dev=0,
+                    config=ServeConfig(max_batch=MAX_BATCH,
+                                       max_wait_s=0.001,
+                                       oracle_check=True))
+    cache = plan.cache_for_device(0)
+    srv.warmup()  # materializes device arrays (epoch retention armed)
+    stop = threading.Event()
+    rng_r = np.random.default_rng(31)
+
+    def refresher():
+        while not stop.is_set():
+            with srv._epoch_lock:
+                _churn(cache, rng_r)
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=refresher)
+    t.start()
+    srv.start()
+    try:
+        rng = np.random.default_rng(17)
+        futs = [srv.submit(rng.integers(0, g.n,
+                                        rng.integers(1, MAX_BATCH + 1)))
+                for _ in range(60)]
+        res = [f.result(timeout=120) for f in futs]
+    finally:
+        stop.set()
+        t.join()
+        srv.stop()
+    s = srv.summary()
+    assert s["oracle_mismatches"] == 0, s
+    assert s["oracle_checks"] == s["batches"]
+    assert len({r.cache_epoch for r in res}) > 1, \
+        "race never actually flipped an epoch under the serving gathers"
+
+
+# ---------------- telemetry ----------------
+
+def test_serve_metrics_telescope_and_quantiles(setup, tmp_path):
+    jsonl = str(tmp_path / "serve.jsonl")
+    tele = Telemetry(TelemetryConfig(jsonl_path=jsonl, window=4,
+                                     run="serve", jax_annotations=False))
+    srv = _server(setup, telemetry=tele, config={"snapshot_every": 3})
+    srv.warmup()
+    srv.start()
+    rng = np.random.default_rng(23)
+    futs = [srv.submit(rng.integers(0, setup[0].n,
+                                    rng.integers(1, MAX_BATCH + 1)))
+            for _ in range(30)]
+    for f in futs:
+        f.result(timeout=60)
+    srv.stop()
+    tele.close(srv.summary()["batches"])
+    from repro.obs.report import load_stream
+    lines = load_stream(jsonl)  # schema-validates
+    snaps = [ln for ln in lines if ln["kind"] == "snapshot"]
+    assert len(snaps) >= 2
+    final = {k: c["total"] for k, c in snaps[-1]["counters"].items()
+             if k.startswith("serve.")}
+    deltas = sum_counter_deltas(snaps, "serve.")
+    for key, total in final.items():
+        assert deltas[key] == total, key  # exact window telescoping
+    s = srv.summary()
+    assert final["serve.replies"] == s["replies"]
+    assert final["serve.requests"] == final["serve.replies"]
+    tiers = {t: final[f"serve.hit_bytes{{tier={t}}}"]
+             for t in ("local", "peer", "pcie")}
+    assert sum(tiers.values()) > 0
+    h = snaps[-1]["hists"]["serve.latency_s"]
+    assert h["count"] == s["replies"]
+    from repro.obs import quantile_from_counts
+    p50 = quantile_from_counts(h["edges"], h["counts"], 0.50)
+    p99 = quantile_from_counts(h["edges"], h["counts"], 0.99)
+    assert p50 is not None and p99 is not None and p50 <= p99
+    names = {ln["name"] for ln in lines if ln["kind"] == "span"}
+    assert {"serve_enqueue", "serve_batch", "serve_sample", "serve_gather",
+            "serve_forward", "serve_reply"} <= names
+
+
+# ---------------- trainer coexistence ----------------
+
+def test_trainer_coexistence_losses_bitwise_equal(setup):
+    """A server hammering the shared clique cache (refreshes off on both
+    sides) leaves a concurrent training run's losses bitwise untouched:
+    residency only moves rows between tiers, never changes their bits."""
+    from repro.train.loop import train_gnn
+
+    g, _, cfg, params = setup
+
+    def fresh_plan():
+        return build_plan(g, topology_matrix("nv2"),
+                          mem_per_device=1_000_000, batch_size=MAX_BATCH,
+                          fanouts=FANOUTS, seed=0)
+
+    r0 = train_gnn(g, fresh_plan(), cfg, steps=6, seed=0)
+
+    plan2 = fresh_plan()
+    srv = GNNServer(g, plan2, cfg, params, dev=0,
+                    config=ServeConfig(max_batch=MAX_BATCH,
+                                       max_wait_s=0.001))
+    srv.warmup()
+    srv.start()
+    stop = threading.Event()
+
+    def client():
+        rng = np.random.default_rng(41)
+        while not stop.is_set():
+            srv.submit(rng.integers(0, g.n,
+                                    rng.integers(1, MAX_BATCH + 1)))
+            time.sleep(0.001)
+
+    t = threading.Thread(target=client)
+    t.start()
+    try:
+        r1 = train_gnn(g, plan2, cfg, steps=6, seed=0)
+    finally:
+        stop.set()
+        t.join()
+        srv.stop()
+    assert srv.summary()["replies"] > srv.config.max_batch  # real traffic
+    np.testing.assert_array_equal(r0.losses, r1.losses)
